@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+prints the per-(arch × shape) three-term roofline with the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs usefulness, and skip notes for the
+cells excluded by DESIGN.md §5."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES, SKIPS
+
+
+def load(dirname: str = "experiments/dryrun"):
+    recs = {}
+    for path in glob.glob(os.path.join(dirname, "*.json")):
+        r = json.load(open(path))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def table(dirname: str = "experiments/dryrun", mesh: str = "16x16"):
+    recs = load(dirname)
+    print(f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s}")
+    n_done = 0
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if shape in SKIPS.get(arch, {}):
+                print(f"{arch:24s} {shape:12s} "
+                      f"{'— skipped: ' + SKIPS[arch][shape]}")
+                continue
+            r = recs.get((arch, shape, mesh))
+            if r is None:
+                print(f"{arch:24s} {shape:12s} {'(pending)':>10s}")
+                continue
+            t = r["roofline_seconds"]
+            u = r.get("useful_flops_ratio")
+            print(f"{arch:24s} {shape:12s} {t['compute']:10.3e} "
+                  f"{t['memory']:10.3e} {t['collective']:10.3e} "
+                  f"{r['dominant']:>10s} "
+                  f"{u if u is None else round(u, 3)!s:>7s}")
+            n_done += 1
+    print(f"-- {n_done} cells recorded on mesh {mesh}")
+    return n_done
+
+
+if __name__ == "__main__":
+    table()

@@ -1,0 +1,46 @@
+"""Benchmark entry point: one function per paper table (+ the beyond-
+paper placement benchmark and the roofline table from the dry-run).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller suites (CI-sized)")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as T
+
+    n8 = 6 if args.quick else 20
+    n64 = 3 if args.quick else 8
+
+    print("== Table: 8-core prediction error (paper: <4%) ==")
+    T.table_8core(n_apps=n8, threaded=True)
+    print("== Table: 64-core prediction error (paper: <6%) ==")
+    T.table_64core(n_apps=n64, threaded=not args.quick)
+    print("== Figure: error vs communication volume (paper §6) ==")
+    T.comm_sweep(n_apps=3 if args.quick else 6)
+    print("== Table: AMTHA vs HEFT/ETF makespan ==")
+    T.vs_heft(n_apps=5 if args.quick else 10)
+    print("== Table: algorithm scaling (incl. §7 128-core config) ==")
+    T.scaling()
+    print("== Beyond-paper: AMTHA expert placement vs round-robin ==")
+    T.expert_placement()
+
+    print("== Roofline table from dry-run artifacts ==")
+    try:
+        from benchmarks.roofline import table
+        table()
+    except Exception as e:          # noqa: BLE001
+        print(f"(roofline table unavailable: {e})", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

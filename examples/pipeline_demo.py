@@ -1,0 +1,57 @@
+"""Pipeline parallelism demo: AMTHA plans the layer->pod stages, the
+GPipe executor runs them with microbatches hopping pods via
+collective_permute — and takes real gradients through the pipeline.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python examples/pipeline_demo.py
+"""
+
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import jax                                      # noqa: E402
+import jax.numpy as jnp                         # noqa: E402
+
+from repro.configs import ARCHS, reduced        # noqa: E402
+from repro.launch.mesh import make_mesh         # noqa: E402
+from repro.models.model import init_params      # noqa: E402
+from repro.runtime.pipeline import (make_pipelined_forward,  # noqa: E402
+                                    plan_stages)
+
+
+def main():
+    n_pods, n_layers = 4, 8
+    cfg = reduced(ARCHS["glm4-9b"]).replace(dtype="float32",
+                                            n_layers=n_layers)
+    per_stage, plan = plan_stages(n_layers, n_pods,
+                                  layer_flops=6.5e12, act_bytes=2 * 4096 * 4096)
+    print(f"AMTHA stage plan: {n_layers} layers -> {n_pods} pods, "
+          f"{per_stage} layers/stage, chain T_est={plan.t_est * 1e3:.2f} ms")
+
+    mesh = make_mesh((n_pods,), ("pod",))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fwd = make_pipelined_forward(cfg, mesh, n_stages=n_pods)
+
+    n_micro, bm, s = 6, 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (n_micro, bm, s),
+                                0, cfg.vocab)
+    with mesh:
+        logits = jax.jit(fwd)(params, tokens)
+        print(f"pipelined logits: {logits.shape}, "
+              f"bubble={(n_pods - 1) / (n_micro + n_pods - 1):.0%} "
+              f"({n_micro} microbatches, {n_pods} stages)")
+
+        def loss(p):
+            return jnp.square(fwd(p, tokens).astype(jnp.float32)).mean()
+        g = jax.jit(jax.grad(loss))(params)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                             for x in jax.tree.leaves(g)))
+        print(f"grad through the pipeline OK, ||g|| = {float(gnorm):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Serving example: batched prefill + greedy decode with the persistent
+KV cache (the path the decode-shape dry-runs lower at 16x16).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "demo-20m", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])

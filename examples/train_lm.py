@@ -1,0 +1,20 @@
+"""End-to-end driver: train the ~110M-param demo LM for a few hundred
+steps on the synthetic Zipf stream, with checkpointing and the fault-
+tolerant loop. (Deliverable (b): the training-kind end-to-end example.)
+
+    PYTHONPATH=src python examples/train_lm.py            # full (~100M)
+    PYTHONPATH=src python examples/train_lm.py --quick    # CI-sized
+"""
+
+import sys
+
+from repro.launch.train import main as train_main
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv:
+        train_main(["--arch", "demo-20m", "--steps", "30", "--batch", "4",
+                    "--seq", "128", "--ckpt-dir", "/tmp/repro_quick_ckpt"])
+    else:
+        train_main(["--arch", "demo-100m", "--steps", "300", "--batch", "8",
+                    "--seq", "512", "--ckpt-dir", "/tmp/repro_100m_ckpt"])

@@ -1,0 +1,11 @@
+"""repro: AMTHA/MPAHA (De Giusti et al., 2010) as a multi-pod JAX
+mapping + training/serving framework.
+
+Subpackages: ``core`` (the paper: MPAHA graphs, the AMTHA mapper,
+baselines, simulator/executor, AMTHA->JAX placement bridges), ``models``
+(10 architecture families), ``kernels`` (Pallas TPU), ``sharding``,
+``optim``, ``data``, ``checkpoint``, ``runtime``, ``configs``,
+``launch``. See DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

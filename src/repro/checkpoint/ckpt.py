@@ -1,0 +1,130 @@
+"""Checkpointing: async save, keep-K retention, restore-with-reshard.
+
+Format: one directory per step holding a flat ``.npz`` (path-keyed
+leaves) + ``meta.json``. ``restore`` re-places every leaf with the
+*current* shardings, so a run can restart on a different mesh shape
+(elastic restart: lose a pod, rebuild a smaller mesh, resume). A
+``COMMIT`` marker makes partially-written checkpoints invisible to
+``restore_latest`` — crash-safe by construction.
+
+Single-host by design of this container; the per-host-shard layout for
+multi-controller runs is a straight extension (write only
+``addressable_shards``; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}/{i}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_into(template, flat):
+    def walk(tree, prefix):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else str(k))
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v, f"{prefix}/{i}")
+                              for i, v in enumerate(tree))
+        return flat[prefix]
+    return walk(template, "")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ---- save -----------------------------------------------------------
+    def save(self, state, step: int, block: bool = False):
+        # snapshot to host memory synchronously (donation-safe), write async
+        flat = {k: np.asarray(v) for k, v in _flatten(state).items()}
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(flat, step), daemon=True)
+            self._thread.start()
+        else:
+            self._write(flat, step)
+
+    def _write(self, flat, step):
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(),
+                       "n_leaves": len(flat)}, f)
+        with open(os.path.join(tmp, "COMMIT"), "w") as f:
+            f.write("ok")
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---- restore ----------------------------------------------------------
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if name.startswith("step_") and \
+                    os.path.exists(os.path.join(full, "COMMIT")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def restore(self, template, step: int, shardings=None):
+        """Load ``step`` into the structure of ``template``. If
+        ``shardings`` (tree of NamedSharding matching template) is given,
+        leaves are placed with them — this is the elastic-restart path:
+        the checkpoint may have been written under a different mesh."""
+        path = os.path.join(self.dir, f"step_{step:08d}", "state.npz")
+        data = np.load(path)
+        flat = {k: data[k] for k in data.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        else:
+            tree = jax.tree.map(
+                lambda t, x: jax.device_put(np.asarray(x), t.sharding)
+                if hasattr(t, "sharding") else jax.numpy.asarray(x),
+                template, tree)
+        return tree
+
+    def restore_latest(self, template, shardings=None):
+        steps = self.list_steps()
+        if not steps:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        return self.restore(template, steps[-1], shardings)

@@ -1,0 +1,10 @@
+"""Assigned architecture config — see DESIGN.md §5 for source notes."""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    # [arXiv:2403.08295] GeGLU, head_dim=256, MQA
+    name="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab=256000, activation="geglu", embed_scale_by_dim=True,
+)

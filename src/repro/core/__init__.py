@@ -1,0 +1,27 @@
+# The paper's primary contribution: the MPAHA application model and the
+# AMTHA task-to-core mapping algorithm, plus the machinery to evaluate
+# them (machine models, baselines, discrete-event + threaded executors,
+# the §5.1 synthetic-app generator) and the beyond-paper placement layer
+# that plugs AMTHA into the JAX framework (expert + layer/pod mapping).
+from .amtha import AMTHA, amtha_schedule
+from .executor import ExecResult, execute_threaded
+from .heft import etf_schedule, heft_schedule
+from .machine import (MachineModel, dell_poweredge_1950, heterogeneous_cluster,
+                      hp_bl260c, tpu_v5e_pod)
+from .mpaha import AppGraph, CommEdge, Subtask
+from .placement import (assign_layers_to_pods, place_experts,
+                        round_robin_placement)
+from .schedule import Schedule, ScheduleError, validate
+from .simulator import SimResult, simulate
+from .synth import (SynthParams, generate_app, paper_suite_8core,
+                    paper_suite_64core)
+
+__all__ = [
+    "AMTHA", "amtha_schedule", "AppGraph", "CommEdge", "Subtask",
+    "MachineModel", "dell_poweredge_1950", "hp_bl260c",
+    "heterogeneous_cluster", "tpu_v5e_pod", "Schedule", "ScheduleError",
+    "validate", "SimResult", "simulate", "ExecResult", "execute_threaded",
+    "heft_schedule", "etf_schedule", "SynthParams", "generate_app",
+    "paper_suite_8core", "paper_suite_64core", "place_experts",
+    "round_robin_placement", "assign_layers_to_pods",
+]

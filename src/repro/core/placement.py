@@ -1,0 +1,171 @@
+"""Beyond-paper: AMTHA as the placement engine of the JAX framework.
+
+Two production mapping problems are cast as MPAHA graphs and solved with
+the unmodified AMTHA algorithm (the paper's §4 argument — the model does
+not change with the architecture — carried up to TPU pods):
+
+1. **Expert placement (MoE/EP)** — experts of a layer are independent
+   tasks whose subtask time is proportional to their routed load; the
+   machine is the set of devices along the `model` mesh axis. AMTHA's
+   processor-selection (min finish time) yields a load-balanced
+   expert -> device map; ``expert_permutation`` turns it into a weight
+   permutation the sharding layer applies. Compared against round-robin
+   in ``benchmarks/expert_placement.py``.
+
+2. **Layer -> pod stage assignment** — transformer blocks are tasks
+   chained by activation-volume edges; pods are processors joined by the
+   slow DCI level. AMTHA recovers contiguous splits on homogeneous pods
+   and shifts the cut under heterogeneous pod speeds.
+
+T_est from the resulting schedule is the mapping layer's predicted step
+time; EXPERIMENTS.md compares it with the roofline-model step time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .amtha import amtha_schedule
+from .machine import (TPU_V5E_DCI_BW, TPU_V5E_ICI_BW, TPU_V5E_PEAK_FLOPS,
+                      CommLevel, MachineModel)
+from .mpaha import AppGraph
+from .schedule import Schedule
+
+
+# ---------------------------------------------------------------------------
+# 1. Expert placement
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ExpertPlacement:
+    expert_to_device: list[int]      # device index per expert
+    permutation: list[int]           # experts reordered so contiguous groups
+    t_est: float                     # predicted makespan (s)
+
+    def device_loads(self, loads: list[float], n_devices: int) -> list[float]:
+        out = [0.0] * n_devices
+        for e, d in enumerate(self.expert_to_device):
+            out[d] += loads[e]
+        return out
+
+
+def expert_graph(loads_flops: list[float],
+                 peak_flops: float = TPU_V5E_PEAK_FLOPS) -> AppGraph:
+    """Each expert = one task, one subtask, time = load/peak. No edges —
+    experts of a layer are independent; AMTHA degenerates to its
+    processor-selection rule, i.e. min-finish-time load balancing."""
+    g = AppGraph(n_types=1)
+    for e, load in enumerate(loads_flops):
+        g.add_task(e, [(max(load, 1.0) / peak_flops,)])
+    g.finalize()
+    return g
+
+
+def ep_machine(n_devices: int) -> MachineModel:
+    locations = [(0, d) for d in range(n_devices)]
+    levels = [CommLevel("dci", 1e-5, TPU_V5E_DCI_BW),
+              CommLevel("ici", 1e-6, TPU_V5E_ICI_BW)]
+    return MachineModel(f"ep-{n_devices}", [0] * n_devices, locations, levels)
+
+
+def place_experts(loads_flops: list[float], n_devices: int,
+                  experts_per_device: int | None = None) -> ExpertPlacement:
+    """AMTHA placement of experts onto EP devices. If
+    ``experts_per_device`` is given (sharding needs equal groups), the
+    assignment is balanced greedily from AMTHA's ordering to exactly
+    that group size — the permutation is then directly usable as a
+    weight reorder for an evenly-sharded expert axis."""
+    n_exp = len(loads_flops)
+    if experts_per_device is None:
+        experts_per_device = n_exp // n_devices
+    assert experts_per_device * n_devices == n_exp, "experts must tile devices"
+
+    machine = ep_machine(n_devices)
+    graph = expert_graph(loads_flops)
+    sched = amtha_schedule(graph, machine)
+
+    # AMTHA order of assignment, capacity-constrained to equal groups:
+    # walk experts by decreasing load (AMTHA's rank order for independent
+    # tasks) and send each to the least-loaded device with space.
+    order = sorted(range(n_exp), key=lambda e: -loads_flops[e])
+    dev_load = [0.0] * n_devices
+    dev_count = [0] * n_devices
+    assign = [-1] * n_exp
+    for e in order:
+        cands = [d for d in range(n_devices) if dev_count[d] < experts_per_device]
+        d = min(cands, key=lambda d: dev_load[d])
+        assign[e] = d
+        dev_load[d] += loads_flops[e]
+        dev_count[d] += 1
+
+    # contiguous permutation: experts grouped by device
+    perm = sorted(range(n_exp), key=lambda e: (assign[e], e))
+    # predicted step time: the capacity-constrained makespan; AMTHA's own
+    # uncapacitated schedule (``sched``) lower-bounds it.
+    t_est = max(max(dev_load) / TPU_V5E_PEAK_FLOPS, sched.makespan())
+    return ExpertPlacement(assign, perm, t_est)
+
+
+def round_robin_placement(loads_flops: list[float], n_devices: int) -> ExpertPlacement:
+    n_exp = len(loads_flops)
+    assign = [e % n_devices for e in range(n_exp)]
+    perm = sorted(range(n_exp), key=lambda e: (assign[e], e))
+    dev = [0.0] * n_devices
+    for e, d in enumerate(assign):
+        dev[d] += loads_flops[e]
+    return ExpertPlacement(assign, perm, max(dev) / TPU_V5E_PEAK_FLOPS)
+
+
+# ---------------------------------------------------------------------------
+# 2. Layer -> pod stage assignment
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StageAssignment:
+    layer_to_pod: list[int]
+    t_est: float
+    schedule: Schedule
+
+
+def layer_graph(layer_flops: list[float], activation_bytes: list[float],
+                pod_speed_flops: list[float]) -> AppGraph:
+    """Tasks = layer blocks (1 subtask each, per-pod-type times); chain
+    edges carry activation volume. ``pod_speed_flops[t]`` is aggregate
+    pod compute for type t."""
+    assert len(activation_bytes) == len(layer_flops) - 1 or \
+        len(activation_bytes) == len(layer_flops)
+    n_types = len(pod_speed_flops)
+    g = AppGraph(n_types=n_types)
+    sids = []
+    for i, fl in enumerate(layer_flops):
+        s = g.add_task(i, [tuple(fl / sp for sp in pod_speed_flops)])
+        sids.append(s[0])
+    for i in range(len(layer_flops) - 1):
+        g.add_edge(sids[i], sids[i + 1], activation_bytes[i])
+    g.finalize()
+    return g
+
+
+def pod_machine(pod_types: list[int], n_types: int) -> MachineModel:
+    locations = [(p,) for p in range(len(pod_types))]
+    levels = [CommLevel("dci", 1e-5, TPU_V5E_DCI_BW)]
+    m = MachineModel("pods", pod_types, locations, levels)
+    m.n_types = n_types
+    return m
+
+
+def assign_layers_to_pods(layer_flops: list[float],
+                          activation_bytes: list[float],
+                          pod_speed_flops: list[float],
+                          pod_types: list[int] | None = None) -> StageAssignment:
+    """Map layer blocks to pods with AMTHA; the DCI level penalizes every
+    cross-pod activation edge, so AMTHA naturally produces (near-)
+    contiguous stages and shifts the boundary toward faster pods."""
+    n_types = len(pod_speed_flops)
+    if pod_types is None:
+        pod_types = list(range(n_types))
+    g = layer_graph(layer_flops, activation_bytes, pod_speed_flops)
+    m = pod_machine(pod_types, n_types)
+    sched = amtha_schedule(g, m)
+    layer_to_pod = [sched.core_of(g.tasks[i][0]) for i in range(len(layer_flops))]
+    return StageAssignment(layer_to_pod, sched.makespan(), sched)

@@ -1,0 +1,113 @@
+"""Flash-decoding Pallas TPU kernel (one new token vs a deep KV cache).
+
+Decode attention is memory-bound: the whole (T, Hkv, D) cache streams
+through VMEM once per token. The kernel walks KV blocks in the grid's
+minor dimension (sequential per core on TPU), carrying the per-group
+(m, l, acc) online-softmax state in VMEM scratch — split-K style as in
+FlashDecoding (arXiv:2311.01282), adapted to the TPU's sequential-grid
+execution instead of a cross-SM reduction pass.
+
+Handles GQA (q heads grouped per KV head), a per-batch validity bound
+``pos`` (linear caches), and ring buffers (``ring=True``: every slot
+< min(pos+1, T) is valid — slot order is irrelevant because RoPE was
+applied at insert). Oracle: repro.kernels.ref.decode_attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, kv_block, n_blocks, scale, softcap, ring):
+    blk = pl.program_id(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale           # (G, D)
+    k = k_ref[0].astype(jnp.float32)                   # (Tb, D)
+    v = v_ref[0].astype(jnp.float32)                   # (Tb, Dv)
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, Tb)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_idx = blk * kv_block + jax.lax.iota(jnp.int32, kv_block)
+    t_total = n_blocks * kv_block
+    limit = jnp.minimum(pos + 1, t_total) if ring else pos + 1
+    valid = kv_idx < limit
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc_new = acc_prev * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(blk == n_blocks - 1)
+    def _finish():
+        o_ref[0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "ring",
+                                             "kv_block", "interpret"))
+def flash_decode(q, k_cache, v_cache, pos, *, scale=None, softcap=None,
+                 ring=False, kv_block=512, interpret=False):
+    """q (B, Hq, D); k/v_cache (B, T, Hkv, D[v]); pos (B,) int32 count of
+    valid entries (absolute position for ring buffers). -> (B, Hq, Dv)."""
+    b, hq, d = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kv_block = min(kv_block, t)
+    pad = (-t) % kv_block
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded slots are masked by `limit` only if pos <= t; clamp
+        pos = jnp.minimum(pos, t)
+    tp = t + pad
+    n_blocks = tp // kv_block
+
+    qr = q.reshape(b, hkv, g, d).reshape(b * hkv, g, d)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * hkv, tp, d)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * hkv, tp, dv)
+    pos_r = jnp.repeat(pos.astype(jnp.int32), hkv)
+
+    kernel = functools.partial(
+        _decode_kernel, kv_block=kv_block, n_blocks=n_blocks, scale=scale,
+        softcap=softcap, ring=ring)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hkv, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, j: (h,)),
+            pl.BlockSpec((1, g, d), lambda h, j: (h, 0, 0)),
+            pl.BlockSpec((1, kv_block, d), lambda h, j: (h, j, 0)),
+            pl.BlockSpec((1, kv_block, dv), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, dv), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g,), jnp.float32),
+                        pltpu.VMEM((g, dv), jnp.float32)],
+        interpret=interpret,
+    )(pos_r, qr, kr, vr)
+    return out.reshape(b, hq, dv)

@@ -1,0 +1,41 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in CPU
+tests and on real hardware (where the compiled Mosaic path runs)."""
+
+from __future__ import annotations
+
+import jax
+
+from . import flash_attention as _fa
+from . import flash_decode as _fd
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None, window=None,
+                    attn_softcap=None, q_block=512, kv_block=512):
+    return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
+                               window=window, softcap=attn_softcap,
+                               q_block=q_block, kv_block=kv_block,
+                               interpret=not _on_tpu())
+
+
+def rmsnorm(x, w, *, eps=1e-6, zero_centered=True):
+    return _rn.rmsnorm(x, w, eps=eps, zero_centered=zero_centered,
+                       interpret=not _on_tpu())
+
+
+def ssd_scan(x, dt, A, B, C, chunk=256):
+    return _ssd.ssd_scan(x, dt, A, B, C, chunk, interpret=not _on_tpu())
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, scale=None, softcap=None,
+                 ring=False, kv_block=512):
+    return _fd.flash_decode(q, k_cache, v_cache, pos, scale=scale,
+                            softcap=softcap, ring=ring, kv_block=kv_block,
+                            interpret=not _on_tpu())

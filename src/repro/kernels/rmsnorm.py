@@ -1,0 +1,52 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Memory-bound fusion: one HBM read of x per token row instead of the
+separate square/mean/rsqrt/mul chain. Rows are tiled (rows_block, d) into
+VMEM; the reduction runs in fp32 lanes. ``zero_centered`` matches the
+gemma convention ((1+w)·x̂).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps, zero_centered):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    xhat = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)
+    w = 1.0 + w if zero_centered else w
+    o_ref[...] = (xhat * w).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "zero_centered",
+                                             "rows_block", "interpret"))
+def rmsnorm(x, w, *, eps=1e-6, zero_centered=True, rows_block=256,
+            interpret=False):
+    """x (..., d); w (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    xr = x.reshape(-1, d)
+    rows = xr.shape[0]
+    rb = min(rows_block, rows)
+    pad = (-rows) % rb
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps,
+                          zero_centered=zero_centered),
+        grid=(xr.shape[0] // rb,),
+        in_specs=[pl.BlockSpec((rb, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, w)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,118 @@
+"""Mamba-2 SSD chunk kernel (Pallas TPU).
+
+The compute hot-spot of the SSM architectures: for each (batch, head) the
+kernel walks the sequence chunk by chunk *sequentially in the grid's
+minor dimension*, keeping the running (P, N) state in a VMEM scratch
+accumulator — the inter-chunk recurrence never round-trips HBM, while the
+intra-chunk dual form runs dense on the MXU.
+
+Grid = (B*H, n_chunks); TPU grids execute minor-most sequentially per
+core, which is exactly the dependency order the recurrence needs (the
+same trick MaxText's chunked attention uses). Chunk size Q and state N
+are MXU-aligned by config (Q=256, N=64/128, P=64).
+
+Oracle: repro.models.ssm.ssd_chunked (itself validated against the
+token-level recurrence).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, y_ref, state_ref,
+                acc_ref, *, chunk, nheads):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)           # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)         # (Q,)
+    A = A_ref[0].astype(jnp.float32)           # ()
+    Bm = B_ref[0].astype(jnp.float32)          # (Q, N)
+    Cm = C_ref[0].astype(jnp.float32)          # (Q, N)
+
+    dA = dt * A                                # (Q,)
+    dA_cs = jnp.cumsum(dA)                     # inclusive
+    # intra-chunk: M[q, k] = C_q·B_k * exp(dA_cs[q]-dA_cs[k]) * dt_k, k<=q
+    seg = dA_cs[:, None] - dA_cs[None, :]
+    mask = jax.lax.iota(jnp.int32, chunk)[:, None] >= \
+        jax.lax.iota(jnp.int32, chunk)[None, :]
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    M = cb * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # off-diagonal: y += C_q · state_in · exp(dA_cs[q])
+    state_in = acc_ref[...]                    # (P, N)
+    y += jnp.exp(dA_cs)[:, None] * jax.lax.dot_general(
+        Cm, state_in, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: state = state_in * exp(sum dA) + sum_k dt_k decay_k B_k x_k
+    decay_to_end = jnp.exp(dA_cs[-1] - dA_cs)  # (Q,)
+    w = (decay_to_end * dt)[:, None] * Bm      # (Q, N)
+    state_new = state_in * jnp.exp(dA_cs[-1]) + jax.lax.dot_general(
+        x, w, (((0,), (0,)), ((), ())),        # (P, N)
+        preferred_element_type=jnp.float32)
+    acc_ref[...] = state_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    state_ref[0] = state_new.astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, chunk=256, *, interpret=False):
+    """x (B,S,H,P); dt (B,S,H); A (H,); B/C (B,S,G,N) with G dividing H.
+    Returns (y (B,S,H,P), final_state (B,H,P,N)). ngroups handled by
+    repeating B/C per head group before the call (G is small)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+    if rep > 1:
+        B = jnp.repeat(B, rep, axis=2)
+        C = jnp.repeat(C, rep, axis=2)
+
+    # layout: (B*H, n_chunks, ...) with the chunk walk minor-most
+    xr = x.transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    dtr = dt.transpose(0, 2, 1).reshape(b * h, s)
+    Br = B.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Cr = C.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    Ar = jnp.tile(A, b)                                  # (B*H,)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nheads=h)
+    y, states = pl.pallas_call(
+        kernel,
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1,), lambda i, c: (i,)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, p, n), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((b * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, Ar, Br, Cr)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3)
+    final = states.reshape(b, h, p, n).astype(x.dtype)
+    return y, final

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+the production meshes and extract the roofline terms from the compiled
+artifact (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+
+Per cell this prints/records: memory_analysis (fits/doesn't),
+cost_analysis FLOPs+bytes, per-opcode collective bytes parsed from the
+partitioned HLO, the three roofline terms and the dominant one, and the
+MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, SKIPS  # noqa: E402
+from repro.core.machine import (TPU_V5E_HBM_BW, TPU_V5E_ICI_BW,  # noqa: E402
+                                TPU_V5E_PEAK_FLOPS)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (abstract_state, input_specs, make_ctx,  # noqa: E402
+                                mesh_axes_for)
+from repro.models.model import ShardCtx  # noqa: E402
+from repro.optim.adamw import OptConfig  # noqa: E402
+from repro.runtime.serve_loop import make_serve_step  # noqa: E402
+from repro.runtime.train_loop import make_train_step  # noqa: E402
+from repro.sharding.partition import Partitioner  # noqa: E402
+
+def model_flops(cfg, shape, n_params: int, expert_params: int) -> float:
+    """6·N_active·D train, 2·N_active·D inference (N excludes embedding
+    for consistency with the standard convention? — we keep full N and
+    note it; MoE uses active experts only)."""
+    if cfg.n_experts:
+        active = (n_params - expert_params
+                  + expert_params * (cfg.top_k + cfg.n_shared_experts)
+                  / (cfg.n_experts + cfg.n_shared_experts))
+    else:
+        active = n_params
+    tokens = shape.global_batch * (1 if shape.mode == "decode" else shape.seq_len)
+    mult = 6 if shape.mode == "train" else 2
+    return mult * active * tokens
+
+
+def count_expert_params(params_tree) -> int:
+    total = 0
+
+    def walk(tree, path):
+        nonlocal total
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, f"{path}/{k}")
+        elif isinstance(tree, (list, tuple)):
+            for i, v in enumerate(tree):
+                walk(v, f"{path}/{i}")
+        elif "/moe/" in path and not path.endswith("router"):
+            total += tree.size
+    walk(params_tree, "")
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, mesh, grad_accum: int = 8,
+               donate: bool = True, attn_claim: str = "auto",
+               remat: str | None = None):
+    cfg = ARCHS[arch]
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    shape = SHAPES[shape_name]
+    axes = mesh_axes_for(cfg, mesh)
+    part = Partitioner(mesh, axes)
+    ctx = make_ctx(cfg, shape, mesh, axes, attn_claim=attn_claim)
+
+    if shape.mode == "decode":
+        params = abstract_state(cfg)["params"]
+        pspecs = part.named(part.param_specs(params))
+        inp = input_specs(cfg, shape)
+        cspecs = part.named(part.cache_specs(inp["cache"]))
+        tok_s = part.named(part.batch_spec(inp["tokens"].shape))
+        pos_s = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        step = make_serve_step(cfg, ctx)
+        jitted = jax.jit(step,
+                         in_shardings=(pspecs, cspecs, tok_s, pos_s),
+                         donate_argnums=(1,) if donate else ())
+        lowered = jitted.lower(params, inp["cache"], inp["tokens"],
+                               inp["pos"])
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        e_params = count_expert_params(params)
+    else:
+        opt_cfg = OptConfig()
+        state = abstract_state(cfg, opt_cfg)
+        pspecs = part.param_specs(state["params"])
+        mspecs = jax.tree.map(
+            lambda spec, p: part.zero1_spec(spec, p.shape),
+            pspecs, state["params"],
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        ospecs = {"m": mspecs, "v": mspecs,
+                  "step": jax.sharding.PartitionSpec()}
+        state_specs = part.named({"params": pspecs, "opt": ospecs})
+        inp = input_specs(cfg, shape)
+        batch_specs = part.named(jax.tree.map(
+            lambda x: part.batch_spec(x.shape), inp))
+        ga = grad_accum if shape.mode == "train" else 1
+        # keep microbatch >= 1 per dp shard
+        while ga > 1 and shape.global_batch % ga:
+            ga //= 2
+        if shape.mode == "train":
+            step = make_train_step(cfg, opt_cfg, ctx, grad_accum=ga,
+                                   param_specs=pspecs)
+            jitted = jax.jit(step, in_shardings=(state_specs, batch_specs),
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state, inp)
+        else:  # prefill
+            from repro.runtime.serve_loop import make_prefill
+            step = make_prefill(cfg, ctx)
+            jitted = jax.jit(step, in_shardings=(state_specs["params"],
+                                                 batch_specs))
+            lowered = jitted.lower(state["params"], inp)
+        n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+        e_params = count_expert_params(state["params"])
+    return lowered, cfg, shape, n_params, e_params
+
+
+def analyze(lowered, compiled, cfg, shape, n_params, e_params,
+            n_chips: int) -> dict:
+    from repro.launch.hlo_analysis import analyze_module
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # trip-count-correct terms (XLA cost_analysis counts while bodies once)
+    mod = analyze_module(hlo)
+    flops_dev = float(mod.dot_flops)
+    bytes_dev = float(mod.traffic_bytes)
+    coll = {k: float(v) for k, v in mod.collective_bytes.items()}
+    coll_total = float(mod.collective_total)
+
+    t_compute = flops_dev / TPU_V5E_PEAK_FLOPS
+    t_memory = bytes_dev / TPU_V5E_HBM_BW
+    t_collective = coll_total / TPU_V5E_ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+
+    mflops = model_flops(cfg, shape, n_params, e_params)
+    mflops_dev = mflops / n_chips
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:      # noqa: BLE001
+        mem_d = {"error": str(e)}
+
+    return {
+        "arch": cfg.name, "shape": shape.name, "n_chips": n_chips,
+        "n_params": n_params,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "collective_total": coll_total,
+        "roofline_seconds": terms,
+        "dominant": dominant,
+        "model_flops_total": mflops,
+        "useful_flops_ratio": (mflops_dev / flops_dev) if flops_dev else None,
+        "memory_analysis": mem_d,
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; the fields above are "
+                    "trip-count-corrected via hlo_analysis",
+        },
+        "unknown_trip_counts": mod.unknown_trip_counts,
+        "top_dots": [[f, m, s[:120]] for f, m, s in mod.top_dots[:6]],
+        "top_collectives": [[b, m, op, s[:60]]
+                            for b, m, op, s in mod.top_collectives[:6]],
+        "top_traffic": [[t, m, op, s[:60]]
+                        for t, m, op, s in mod.top_traffic[:6]],
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str | None,
+             grad_accum: int = 8, attn_claim: str = "auto",
+             remat: str | None = None) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    with mesh:
+        lowered, cfg, shape, n_params, e_params = lower_cell(
+            arch, shape_name, mesh, grad_accum=grad_accum,
+            attn_claim=attn_claim, remat=remat)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec = analyze(lowered, compiled, cfg, shape, n_params, e_params,
+                      n_chips)
+    rec["mesh"] = "2x16x16" if multi_pod else "16x16"
+    rec["lower_s"] = round(t_lower, 1)
+    rec["compile_s"] = round(t_compile, 1)
+    rec["attn_claim"] = attn_claim
+    rec["grad_accum"] = grad_accum
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{rec['mesh']}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=8)
+    ap.add_argument("--attn-claim", default="auto")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        from repro.configs import cells as all_cells
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        if args.shape in SKIPS.get(args.arch, {}):
+            print(f"SKIP {args.arch} x {args.shape}: "
+                  f"{SKIPS[args.arch][args.shape]}")
+            return
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        rec = run_cell(arch, shape, args.multi_pod, args.out,
+                       grad_accum=args.grad_accum,
+                       attn_claim=args.attn_claim, remat=args.remat)
+        t = rec["roofline_seconds"]
+        print(f"OK {arch} x {shape} [{rec['mesh']}] "
+              f"compile={rec['compile_s']}s "
+              f"compute={t['compute']:.3e}s memory={t['memory']:.3e}s "
+              f"coll={t['collective']:.3e}s dom={rec['dominant']} "
+              f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

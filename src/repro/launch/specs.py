@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation) and
+the jit-able step builders the dry-run lowers — shared by dryrun.py,
+benchmarks/roofline.py and the tests."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ModelConfig, ShapeConfig
+from repro.models.model import ShardCtx, init_cache, init_params
+from repro.optim.adamw import OptConfig, init_opt_state
+from repro.sharding.partition import MeshAxes, Partitioner
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs as ShapeDtypeStructs for one (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        return {
+            "tokens": sds((b, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+            "cache": abstract(lambda: init_cache(cfg, b, s)),
+        }
+    if cfg.frontend == "frame_stub":
+        return {"frames": sds((b, s, cfg.d_model), jnp.float32),
+                "labels": sds((b, s), jnp.int32)}
+    if cfg.frontend == "patch_stub":
+        st = s - cfg.n_patches
+        return {"patches": sds((b, cfg.n_patches, cfg.d_model), jnp.float32),
+                "tokens": sds((b, st), jnp.int32),
+                "labels": sds((b, st), jnp.int32)}
+    return {"tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return abstract(partial(init_params, cfg), key)
+
+
+def abstract_state(cfg: ModelConfig, opt_cfg: OptConfig | None = None):
+    params = abstract_params(cfg)
+    opt = abstract(partial(init_opt_state, cfg=opt_cfg or OptConfig()), params)
+    return {"params": params, "opt": opt}
+
+
+def make_ctx(cfg: ModelConfig, shape: ShapeConfig, mesh,
+             axes: MeshAxes, mode: str | None = None,
+             attn_claim: str = "auto") -> ShardCtx:
+    """``attn_claim``: how small-head archs (heads % model != 0, whose
+    attention weights are replicated over `model`) use the model axis for
+    attention activations. "none" (baseline) duplicates attention compute
+    across the model axis — safe with GSPMD. "batch"/"seq" claim the axis
+    via sharding constraints; GSPMD handles these poorly at the TP-MLP
+    boundary (involuntary full remat), so the production variant is the
+    shard_map sequence-parallel attention (ctx.attn_mode="shard_map_seq",
+    see EXPERIMENTS.md §Perf)."""
+    part = Partitioner(mesh, axes)
+    dp = part.dp_axes_for_batch(shape.global_batch)
+    if attn_claim == "auto":
+        # production default: sequence-parallel shard_map attention for
+        # small-head archs (EXPERIMENTS.md §Perf, gemma2 iter 1)
+        attn_claim = "shard_map_seq"
+    attn_mode = None
+    if attn_claim != "none" and cfg.n_heads and \
+            cfg.n_heads % part.model_n and shape.mode != "decode":
+        dp_prod = 1
+        sizes = dict(mesh.shape)
+        for a in dp:
+            dp_prod *= sizes[a]
+        if attn_claim == "batch" and \
+                (shape.global_batch // max(dp_prod, 1)) % part.model_n == 0:
+            attn_mode = "batch"
+        elif shape.seq_len % part.model_n == 0:
+            attn_mode = attn_claim if attn_claim != "batch" else "seq"
+    return ShardCtx(mesh=mesh, dp_axes=dp, model_axis=axes.model,
+                    mode=mode or shape.mode, attn_mode=attn_mode)
+
+
+def mesh_axes_for(cfg: ModelConfig, mesh) -> MeshAxes:
+    """FSDP whenever TP-only weights would exceed ~4 GB/device."""
+    names = mesh.axis_names
+    data = tuple(a for a in names if a != "model")
+    model_n = dict(zip(names, mesh.devices.shape))["model"]
+    # rough bf16 weight bytes / model_n
+    n_params = sum(x.size for x in jax.tree.leaves(abstract_params(cfg)))
+    per_dev = 2 * n_params / model_n
+    return MeshAxes(data=data, model="model", fsdp=per_dev > 4e9)

@@ -1,0 +1,102 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch demo-100m \
+        --steps 300 --batch 8 --seq 512 [--reduced] [--mesh 2x4] \
+        [--ckpt-dir /tmp/ckpt] [--compression int8]
+
+On a single CPU device this runs the real training loop (fault-tolerant
+Trainer: checkpoints, retry, straggler monitor). With a mesh spec and
+multiple devices it applies the full sharding stack (the same path the
+dry-run lowers at 16x16).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import ARCHS, reduced as reduce_cfg
+from repro.configs.demo import DEMO_20M, DEMO_100M
+from repro.data.pipeline import PipelineConfig, Prefetcher, TokenPipeline
+from repro.models.model import ShardCtx
+from repro.optim.adamw import OptConfig
+from repro.runtime.train_loop import Trainer, init_train_state
+
+DEMOS = {c.name: c for c in (DEMO_100M, DEMO_20M)}
+
+
+def resolve_config(name: str, reduced: bool):
+    cfg = DEMOS.get(name) or ARCHS[name]
+    if reduced:
+        cfg = reduce_cfg(cfg).replace(dtype="float32")
+    return cfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="demo-100m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CI)")
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x4 -> (data=2, model=4)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = resolve_config(args.arch, args.reduced)
+    opt = OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                    total_steps=args.steps, compression=args.compression)
+
+    ctx = ShardCtx(mode="train")
+    jit_kwargs = {}
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        from repro.launch.specs import make_ctx
+        from repro.sharding.partition import MeshAxes, Partitioner
+        from repro.configs.base import ShapeConfig
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh(shape, ("data", "model")[-len(shape):])
+        axes = MeshAxes(data=mesh.axis_names[:-1] or ("data",),
+                        model=mesh.axis_names[-1])
+        sc = ShapeConfig("cli", args.seq, args.batch, "train")
+        ctx = make_ctx(cfg, sc, mesh, axes)
+
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"steps={args.steps} batch={args.batch} seq={args.seq}")
+
+    pipe = Prefetcher(TokenPipeline(
+        cfg, PipelineConfig(batch=args.batch, seq_len=args.seq,
+                            seed=args.seed)))
+    trainer = Trainer(cfg, opt, ctx, args.ckpt_dir,
+                      ckpt_every=args.ckpt_every,
+                      grad_accum=args.grad_accum)
+    # resume if a committed checkpoint exists
+    from repro.checkpoint.ckpt import CheckpointManager
+    mgr = CheckpointManager(args.ckpt_dir)
+    if mgr.list_steps():
+        state = mgr.restore_latest(state)
+        print(f"resumed from step {int(state['opt']['step'])}")
+
+    state, history, monitor = trainer.run(state, pipe, args.steps)
+    pipe.close()
+    for h in history[-10:]:
+        print(json.dumps(h))
+    if monitor.flagged:
+        print(f"straggler steps flagged: {monitor.flagged[:5]}")
+    print(f"final loss: {history[-1]['loss']:.4f}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .model import ShardCtx, forward, init_cache, init_params
+
+__all__ = ["ShardCtx", "forward", "init_cache", "init_params"]

@@ -1,0 +1,247 @@
+"""Model assembly: embedding/frontend -> scanned repeat groups -> head.
+
+One assembly serves all 10 architectures; the layer mix comes from
+``cfg.repeat_structure()`` (DESIGN.md §8). Repeated groups run under
+``lax.scan`` with stacked parameters — HLO size stays O(unit), which is
+what keeps 94-layer compiles tractable and is the production pattern.
+Training remats the group body.
+
+Modes: ``train`` (logits for the loss), ``prefill`` (last-token logits +
+a filled cache), ``decode`` (one token against the cache). Caches of
+repeated groups are stacked along the scan dim; ``dense_local`` layers
+use ring buffers of length ``window``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (init_layer, init_shared_block, init_shared_lora,
+                     layer_forward, shared_block_forward, _init)
+from .layers import embed_tokens, rms_norm, softcap
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Execution context threaded through the model: the mesh (None for
+    single-device smoke tests), which axes shard the batch, the model/EP
+    axis name, the mode, and — for small-head archs whose attention
+    weights are replicated over `model` — how attention *activations*
+    claim the model axis ("batch" or "seq")."""
+    mesh: object = None
+    dp_axes: tuple[str, ...] = ()
+    model_axis: str | None = None
+    mode: str = "train"
+    attn_mode: str | None = None     # None | "batch" | "seq" | "shard_map_seq"
+    vma_axes: tuple[str, ...] = ()   # set when the model body itself runs
+                                     # under a manual shard_map (pipeline)
+
+    def with_mode(self, mode: str) -> "ShardCtx":
+        return ShardCtx(self.mesh, self.dp_axes, self.model_axis, mode,
+                        self.attn_mode, self.vma_axes)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg, key) -> dict:
+    prologue, n_rep, unit, tail = cfg.repeat_structure()
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+
+    if cfg.frontend == "frame_stub":
+        params["frontend"] = _init(keys[0], (cfg.d_model, cfg.d_model),
+                                   cfg.d_model, dt)
+    else:
+        # 1/sqrt(d) embedding init keeps tied-head logits O(1) (gemma's
+        # sqrt(d) embed scaling composes back to O(1) activations)
+        params["embed"] = _init(keys[0], (cfg.vocab, cfg.d_model),
+                                cfg.d_model, dt)
+        if cfg.frontend == "patch_stub":
+            params["patch_proj"] = _init(keys[5], (cfg.d_model, cfg.d_model),
+                                         cfg.d_model, dt)
+
+    params["prologue"] = [init_layer(k, cfg, jax.random.fold_in(keys[1], i))
+                          for i, k in enumerate(prologue)]
+    gkeys = jax.random.split(keys[2], n_rep)
+    params["groups"] = {
+        str(pos): jax.vmap(lambda k, kind=kind: init_layer(kind, cfg, k))(
+            jax.vmap(lambda k, pos=pos: jax.random.fold_in(k, pos))(gkeys))
+        for pos, kind in enumerate(unit)
+    }
+    params["tail"] = [init_layer(k, cfg, jax.random.fold_in(keys[3], i))
+                      for i, k in enumerate(tail)]
+    if cfg.shared_attn_every:
+        params["shared"] = init_shared_block(cfg, keys[4])
+        params["shared_lora"] = jax.vmap(
+            lambda k: init_shared_lora(cfg, k))(jax.random.split(keys[6], n_rep))
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dt)
+    if not cfg.tie_embeddings:
+        params["head"] = _init(keys[7], (cfg.d_model, cfg.vocab),
+                               cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _embed(params, batch, cfg):
+    """Returns (x (B,S,d), positions, prefix_len)."""
+    if cfg.frontend == "frame_stub":
+        x = jnp.einsum("bsd,de->bse", batch["frames"].astype(cfg.dtype),
+                       params["frontend"])
+        return x, jnp.arange(x.shape[1]), None
+    tok = embed_tokens(batch["tokens"], params["embed"],
+                       cfg.embed_scale_by_dim)
+    if cfg.frontend == "patch_stub" and "patches" in batch:
+        px = jnp.einsum("bpd,de->bpe", batch["patches"].astype(cfg.dtype),
+                        params["patch_proj"])
+        x = jnp.concatenate([px, tok], axis=1)
+        prefix = jnp.full((x.shape[0],), cfg.n_patches, jnp.int32)
+        return x, jnp.arange(x.shape[1]), prefix
+    return tok, jnp.arange(tok.shape[1]), None
+
+
+def _head(params, x, cfg):
+    x = rms_norm(x, params["final_norm"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return logits
+
+
+def forward(params, batch, cfg, ctx: ShardCtx):
+    """train -> (logits, aux); prefill -> (last_logits, aux, cache);
+    decode -> (logits (B,V), aux, cache)."""
+    prologue, n_rep, unit, tail = cfg.repeat_structure()
+    mode = ctx.mode
+    decode = mode == "decode"
+    caches = batch.get("cache") if decode else None
+
+    x, positions, prefix_len = _embed(params, batch, cfg)
+    if decode:
+        positions = batch["pos"]        # scalar absolute position
+    emb0 = x if cfg.shared_attn_every else None
+    aux0 = jnp.zeros((), jnp.float32)
+
+    new_prologue_cache = []
+    for i, kind in enumerate(prologue):
+        c = caches["prologue"][i] if decode else None
+        x, a, nc = layer_forward(kind, params["prologue"][i], x, cfg=cfg,
+                                 ctx=ctx, positions=positions, cache=c,
+                                 prefix_len=prefix_len)
+        aux0 = aux0 + a
+        new_prologue_cache.append(nc)
+
+    # ---- scanned repeat groups ----------------------------------------
+    def group_body(carry, xs_t):
+        x, aux = carry
+        gp, gc, lora = xs_t
+        new_gc = {}
+        if cfg.shared_attn_every:
+            sc = gc.get("shared") if decode else None
+            x, nsc = shared_block_forward(params["shared"], lora, x, emb0,
+                                          cfg=cfg, ctx=ctx,
+                                          positions=positions, cache=sc)
+            if nsc is not None:
+                new_gc["shared"] = nsc
+        for pos, kind in enumerate(unit):
+            c = gc.get(str(pos)) if decode else None
+            x, a, nc = layer_forward(kind, gp[str(pos)], x, cfg=cfg, ctx=ctx,
+                                     positions=positions, cache=c,
+                                     prefix_len=prefix_len)
+            aux = aux + a
+            if nc is not None:
+                new_gc[str(pos)] = nc
+        return (x, aux), new_gc
+
+    body = group_body
+    if mode == "train" and cfg.remat != "none":
+        policy = None if cfg.remat == "full" else \
+            jax.checkpoint_policies.checkpoint_dots
+        body = jax.checkpoint(group_body, policy=policy,
+                              prevent_cse=False)
+
+    if n_rep:
+        lora_xs = params.get("shared_lora")
+        group_cache_xs = caches["groups"] if decode else {}
+        xs = (params["groups"], group_cache_xs,
+              lora_xs if lora_xs is not None else
+              jnp.zeros((n_rep, 0), jnp.float32))
+        (x, aux0), new_group_cache = jax.lax.scan(body, (x, aux0), xs)
+    else:
+        new_group_cache = {}
+
+    new_tail_cache = []
+    for i, kind in enumerate(tail):
+        c = caches["tail"][i] if decode else None
+        x, a, nc = layer_forward(kind, params["tail"][i], x, cfg=cfg, ctx=ctx,
+                                 positions=positions, cache=c,
+                                 prefix_len=prefix_len)
+        aux0 = aux0 + a
+        new_tail_cache.append(nc)
+
+    # ---- head -----------------------------------------------------------
+    if mode == "train":
+        return _head(params, x, cfg), aux0
+    if mode == "prefill":
+        logits = _head(params, x[:, -1:], cfg)[:, 0]
+        cache = {"prologue": new_prologue_cache, "groups": new_group_cache,
+                 "tail": new_tail_cache}
+        return softcap(logits, cfg.logit_softcap), aux0, cache
+    # decode
+    logits = _head(params, x, cfg)[:, 0]
+    cache = {"prologue": new_prologue_cache, "groups": new_group_cache,
+             "tail": new_tail_cache}
+    return softcap(logits, cfg.logit_softcap), aux0, cache
+
+
+# ---------------------------------------------------------------------------
+# cache init (zeros — for decode-shape dry-runs and serving)
+# ---------------------------------------------------------------------------
+
+def _layer_cache(kind, cfg, b, max_seq, dt):
+    if kind == "ssm":
+        gn = cfg.ssm_ngroups * cfg.ssm_state
+        return {
+            "conv_x": jnp.zeros((b, cfg.ssm_conv - 1, cfg.d_inner), dt),
+            "conv_B": jnp.zeros((b, cfg.ssm_conv - 1, gn), dt),
+            "conv_C": jnp.zeros((b, cfg.ssm_conv - 1, gn), dt),
+            "state": jnp.zeros((b, cfg.ssm_heads, cfg.ssm_headdim,
+                                cfg.ssm_state), dt),
+        }
+    if cfg.kv_lora_rank:
+        return {"latent": jnp.zeros((b, max_seq, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((b, max_seq, cfg.qk_rope_dim), dt)}
+    t = min(cfg.window, max_seq) if kind.endswith("local") else max_seq
+    return {"k": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((b, t, cfg.n_kv_heads, cfg.head_dim), dt)}
+
+
+def init_cache(cfg, batch_size: int, max_seq: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    prologue, n_rep, unit, tail = cfg.repeat_structure()
+    stack = lambda tree: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), tree)
+    groups = {str(pos): stack(_layer_cache(kind, cfg, batch_size, max_seq, dt))
+              for pos, kind in enumerate(unit)}
+    if cfg.shared_attn_every:
+        groups["shared"] = stack(
+            {"k": jnp.zeros((batch_size, max_seq, cfg.n_kv_heads,
+                             cfg.head_dim), dt),
+             "v": jnp.zeros((batch_size, max_seq, cfg.n_kv_heads,
+                             cfg.head_dim), dt)})
+    return {
+        "prologue": [_layer_cache(k, cfg, batch_size, max_seq, dt)
+                     for k in prologue],
+        "groups": groups,
+        "tail": [_layer_cache(k, cfg, batch_size, max_seq, dt) for k in tail],
+    }

@@ -1,0 +1,133 @@
+"""Mamba-2 SSD (state-space duality) layer — arXiv:2405.21060.
+
+Chunked prefill algorithm (Listing 1 of the paper, jnp-native): the
+sequence is split into chunks of Q; within a chunk the dual (quadratic)
+form runs on the MXU, between chunks a scan carries the (H, P, N) state.
+This function is also the oracle for ``kernels/ssd_scan.py``.
+
+Shapes follow the paper: x (B,S,H,P) values, dt (B,S,H) step sizes
+(post-softplus), A (H,) negative decay, B/C (B,S,G,N) input/output
+projections shared across H//G head groups, D (H,) skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum(x[..., j+1:i+1]) for j<i,
+    -inf above the diagonal. x: (..., Q) -> (..., Q, Q)."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                initial_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        # ragged tail: dt=0 padding is exact (decay exp(0)=1, zero update)
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = zpad(x), zpad(dt), zpad(B), zpad(C)
+        y, final = ssd_chunked(x, dt, A, B, C, chunk, initial_state)
+        return y[:, :s], final
+    nc = s // chunk
+    rep = h // g
+
+    # chunked views
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+    dA = dtc * A.astype(jnp.float32)                       # (b,nc,Q,h)
+    dA = dA.transpose(0, 1, 3, 2)                          # (b,nc,h,Q)
+    dA_cs = jnp.cumsum(dA, axis=-1)
+
+    # 1. intra-chunk (diagonal blocks): Y_diag = (C B^T ⊙ L ⊙ dt) X
+    L = jnp.exp(segsum(dA))                                # (b,nc,h,Q,Q)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)          # (b,nc,g,Q,Q)
+    CB = jnp.repeat(CB, rep, axis=2)                       # (b,nc,h,Q,Q)
+    M = CB * L * dtc.transpose(0, 1, 3, 2)[..., None, :]   # scale by dt_k
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(x.dtype), xc)
+
+    # 2. chunk states: state_c = sum_k B_k dt_k x_k decay(k->end)
+    decay = jnp.exp(dA_cs[..., -1:] - dA_cs)               # (b,nc,h,Q)
+    Bd = jnp.repeat(Bc, rep, axis=3) if g != h else Bc     # (b,nc,Q,h,n)
+    w = (decay.transpose(0, 1, 3, 2) * dtc).astype(x.dtype)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bd, w, xc)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[..., -1])                  # (b,nc,h)
+    init = jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None \
+        else initial_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st_c, dec = inp
+        new = carry * dec[..., None, None] + st_c.astype(jnp.float32)
+        return new, carry                                  # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b,nc,h,p,n)
+
+    # 4. off-diagonal contribution: Y_off = C · decay(start->q) · state_prev
+    state_decay = jnp.exp(dA_cs)                           # decay start->q incl q
+    Cd = jnp.repeat(Cc, rep, axis=3) if g != h else Cc     # (b,nc,Q,h,n)
+    y_off = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                       Cd, prev_states.astype(jnp.float32),
+                       state_decay).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final.astype(x.dtype)
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, B: jax.Array, C: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. state (B,H,P,N); x (B,H,P); dt (B,H);
+    B/C (B,G,N). Returns (y (B,H,P), new_state)."""
+    h = x.shape[1]
+    g = B.shape[1]
+    rep = h // g
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    Bd = jnp.repeat(B, rep, axis=1)                                # (B,H,N)
+    Cd = jnp.repeat(C, rep, axis=1)
+    upd = (dt.astype(jnp.float32)[..., None, None]
+           * x.astype(jnp.float32)[..., None]
+           * Bd.astype(jnp.float32)[..., None, :])                 # (B,H,P,N)
+    new_state = state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cd.astype(jnp.float32))
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sequential reference (oracle for tests of the chunked path)
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(x, dt, A, B, C, initial_state=None):
+    """Token-by-token recurrence — the ground truth ssd_chunked must match."""
+    b, s, h, p = x.shape
+    n = B.shape[3]
+    st = jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None \
+        else initial_state.astype(jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp
+        y, st = ssd_decode_step(st.astype(jnp.float32), xt, dtt, A, Bt, Ct)
+        return st.astype(jnp.float32), y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, st, xs)
+    return ys.transpose(1, 0, 2, 3), final.astype(x.dtype)

@@ -1,0 +1,67 @@
+"""Serving: prefill + batched greedy decode with a persistent KV cache.
+
+``make_prefill`` / ``make_serve_step`` build the two jit-able entry
+points the dry-run lowers for the decode shapes (one new token against a
+``seq_len``-deep cache). ``generate`` drives them for the examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ShardCtx, forward, init_cache
+
+
+def make_prefill(cfg, ctx: ShardCtx):
+    def prefill(params, batch):
+        logits, _, cache = forward(params, batch, cfg, ctx.with_mode("prefill"))
+        return logits, cache
+    return prefill
+
+
+def make_serve_step(cfg, ctx: ShardCtx):
+    """serve_step(params, cache, token (B,1), pos ()) ->
+    (next_token (B,1), logits (B,V), cache)."""
+    def serve_step(params, cache, token, pos):
+        batch = {"tokens": token, "pos": pos, "cache": cache}
+        logits, _, cache = forward(params, batch, cfg, ctx.with_mode("decode"))
+        next_token = jnp.argmax(logits, axis=-1)[:, None].astype(token.dtype)
+        return next_token, logits, cache
+    return serve_step
+
+
+def pad_cache_to(cfg, cache, batch: int, max_seq: int):
+    """Grow a prefill cache to the serving window (zeros past the filled
+    prefix) so decode can run to ``max_seq``."""
+    target = init_cache(cfg, batch, max_seq)
+
+    def fit(src, dst):
+        if src.shape == dst.shape:
+            return src
+        pads = [(0, d - s) for s, d in zip(src.shape, dst.shape)]
+        return jnp.pad(src, pads)
+
+    return jax.tree.map(fit, cache, target)
+
+
+def generate(cfg, ctx, params, prompt_batch, n_tokens: int,
+             max_seq: int | None = None):
+    """Greedy generation: prefill the prompt then step the decoder."""
+    prefill = jax.jit(make_prefill(cfg, ctx))
+    step = jax.jit(make_serve_step(cfg, ctx))
+    prompt = prompt_batch["tokens"]
+    b, s = prompt.shape
+    total = s + n_tokens if cfg.n_patches == 0 else \
+        s + cfg.n_patches + n_tokens
+    max_seq = max_seq or total
+    logits, cache = prefill(params, prompt_batch)
+    cache = pad_cache_to(cfg, cache, b, max_seq)
+    token = jnp.argmax(logits, axis=-1)[:, None].astype(prompt.dtype)
+    out = [token]
+    pos = jnp.asarray(s if cfg.n_patches == 0 else s + cfg.n_patches)
+    for _ in range(n_tokens - 1):
+        token, logits, cache = step(params, cache, token, pos)
+        out.append(token)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,144 @@
+"""Unit tests for the paper's core: MPAHA graphs, the AMTHA algorithm,
+rank semantics, processor selection, and the baselines."""
+
+import pytest
+
+from repro.core import (AppGraph, Schedule, ScheduleError, amtha_schedule,
+                        dell_poweredge_1950, etf_schedule,
+                        heterogeneous_cluster, heft_schedule, validate)
+from repro.core.machine import CommLevel, MachineModel
+
+
+def two_core_machine(bw=1e6, lat=0.0):
+    return MachineModel("m2", [0, 0], [(0,), (1,)],
+                        [CommLevel("bus", lat, bw)])
+
+
+def test_single_task_chain_on_one_core():
+    g = AppGraph(n_types=1)
+    g.add_task(0, [(1.0,), (2.0,), (3.0,)])
+    g.finalize()
+    m = two_core_machine()
+    s = amtha_schedule(g, m)
+    validate(s, g, m)
+    assert s.makespan() == pytest.approx(6.0)
+    # chain order preserved
+    order = s.order_on_core(s.core_of(0))
+    assert order == [0, 1, 2]
+
+
+def test_independent_tasks_balance_across_cores():
+    g = AppGraph(n_types=1)
+    for t in range(4):
+        g.add_task(t, [(2.0,)])
+    g.finalize()
+    m = two_core_machine()
+    s = amtha_schedule(g, m)
+    validate(s, g, m)
+    assert s.makespan() == pytest.approx(4.0)   # 2 per core
+
+
+def test_rank_selects_heavier_ready_task_first():
+    g = AppGraph(n_types=1)
+    g.add_task(0, [(10.0,)])
+    g.add_task(1, [(1.0,)])
+    g.finalize()
+    m = two_core_machine()
+    sched = amtha_schedule(g, m)
+    # heavier task starts at 0 (was selected first)
+    assert sched.placements[g.tasks[0][0]].start == 0.0
+
+
+def test_communication_affects_placement():
+    """Producer->consumer with huge comm volume: AMTHA must co-locate."""
+    g = AppGraph(n_types=1)
+    g.add_task(0, [(5.0,)])
+    g.add_task(1, [(5.0,)])
+    g.add_edge(g.tasks[0][0], g.tasks[1][0], volume=1e9)
+    g.finalize()
+    m = two_core_machine(bw=1e6)    # 1000 s to move 1e9 bytes
+    s = amtha_schedule(g, m)
+    validate(s, g, m)
+    assert s.core_of(g.tasks[0][0]) == s.core_of(g.tasks[1][0])
+    assert s.makespan() == pytest.approx(10.0)
+
+
+def test_cheap_communication_allows_spreading():
+    g = AppGraph(n_types=1)
+    g.add_task(0, [(5.0,)])
+    g.add_task(1, [(5.0,)])                      # independent
+    g.add_task(2, [(5.0,)])
+    g.finalize()
+    m = two_core_machine(bw=1e12)
+    s = amtha_schedule(g, m)
+    validate(s, g, m)
+    assert s.makespan() == pytest.approx(10.0)   # 2+1 split
+
+
+def test_heterogeneous_prefers_fast_processor():
+    g = AppGraph(n_types=2)
+    g.add_task(0, [(2.0, 8.0)])                  # type0 4x faster
+    g.finalize()
+    m = heterogeneous_cluster(n_fast=1, n_slow=1)
+    s = amtha_schedule(g, m)
+    validate(s, g, m)
+    assert m.core_types[s.core_of(0)] == 0
+    assert s.makespan() == pytest.approx(2.0)
+
+
+def test_lnu_deferred_placement():
+    """A task whose later subtasks depend on an unassigned task: the
+    blocked suffix goes to LNU and is placed by the cascade when the
+    predecessor task is assigned."""
+    g = AppGraph(n_types=1)
+    a = g.add_task(0, [(1.0,), (1.0,)])
+    b = g.add_task(1, [(5.0,), (1.0,)])
+    # B.st2 depends on A.st2; A.st1 depends on B.st1
+    g.add_edge(a[1], b[1], 100.0)
+    g.add_edge(b[0], a[0], 100.0)
+    g.finalize()
+    m = two_core_machine(bw=1e9)
+    s = amtha_schedule(g, m)
+    validate(s, g, m)                            # everything placed legally
+
+
+def test_task_coherence_is_enforced():
+    g = AppGraph(n_types=1)
+    g.add_task(0, [(1.0,), (1.0,)])
+    g.finalize()
+    m = two_core_machine()
+    s = Schedule(m.n_cores)
+    s.place(0, 0, 0.0, 1.0)
+    s.place(1, 1, 1.0, 2.0)                      # chain split across cores
+    with pytest.raises(ScheduleError):
+        validate(s, g, m)
+
+
+def test_gap_insertion():
+    """AMTHA places a short ready subtask into an idle gap (§3.4)."""
+    s = Schedule(1)
+    s.place(0, 0, 0.0, 1.0)
+    s.place(1, 0, 5.0, 6.0)
+    assert s.earliest_slot(0, ready=0.5, duration=2.0) == pytest.approx(1.0)
+    assert s.earliest_slot(0, ready=0.5, duration=10.0) == pytest.approx(6.0)
+
+
+def test_baselines_produce_valid_schedules():
+    from repro.core import paper_suite_8core
+    g = paper_suite_8core(n_apps=1, seed=3)[0]
+    m = dell_poweredge_1950()
+    for fn in (heft_schedule, etf_schedule):
+        s = fn(g, m)
+        validate(s, g, m, require_task_coherence=False)
+
+
+def test_amtha_vs_serial_lower_bound():
+    """Makespan can never beat total-work / n_cores, and never exceeds
+    the serial time."""
+    from repro.core import paper_suite_8core
+    g = paper_suite_8core(n_apps=1, seed=7)[0]
+    m = dell_poweredge_1950()
+    s = amtha_schedule(g, m)
+    total = sum(st.times[0] for st in g.subtasks)
+    assert total / m.n_cores <= s.makespan() + 1e-9
+    assert s.makespan() <= total + 1e-9

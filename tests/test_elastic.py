@@ -1,0 +1,60 @@
+"""Elastic restart: a checkpoint written under one mesh restores onto a
+different mesh (the lose-a-pod / shrink-the-job path). Runs in a
+subprocess with 8 forced host devices."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_checkpoint_resharded_restore(tmp_path):
+    code = f"""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import ARCHS, reduced
+    from repro.launch.mesh import make_mesh
+    from repro.sharding.partition import Partitioner, MeshAxes
+    from repro.optim.adamw import OptConfig
+    from repro.runtime.train_loop import init_train_state
+    from repro.checkpoint.ckpt import CheckpointManager
+
+    cfg = reduced(ARCHS["glm4-9b"]).replace(dtype="float32")
+    opt = OptConfig()
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+
+    # write under an 8-device (2x4) mesh
+    mesh_a = make_mesh((2, 4), ("data", "model"))
+    part_a = Partitioner(mesh_a, MeshAxes(("data",), "model"))
+    sh_a = part_a.named(part_a.param_specs(state["params"]))
+    state_a = dict(state, params=jax.device_put(state["params"], sh_a))
+    mgr = CheckpointManager(r"{tmp_path}", async_save=False)
+    mgr.save(state_a, 7, block=True)
+
+    # restore under a *smaller* 4-device (2x2) mesh with new shardings
+    mesh_b = make_mesh((2, 2), ("data", "model"))
+    part_b = Partitioner(mesh_b, MeshAxes(("data",), "model"))
+    sh_b = part_b.named(part_b.param_specs(state["params"]))
+    restored = mgr.restore(state, 7,
+                           shardings=dict(
+                               params=sh_b,
+                               opt=jax.tree.map(
+                                   lambda x: jax.sharding.NamedSharding(
+                                       mesh_b, jax.sharding.PartitionSpec()),
+                                   state["opt"])))
+    for a, b in zip(jax.tree.leaves(state_a["params"]),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and it is actually placed on the new mesh
+    leaf = jax.tree.leaves(restored["params"])[0]
+    assert leaf.sharding.mesh.shape == {{"data": 2, "model": 2}}
+    print("ELASTIC OK")
+    """
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=540)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "ELASTIC OK" in r.stdout

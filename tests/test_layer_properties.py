@@ -1,0 +1,90 @@
+"""Hypothesis property tests on the numeric layers' invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (apply_rope, attention_streamed, cross_entropy,
+                                 rms_norm)
+from repro.models.ssm import ssd_chunked, ssd_sequential
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([16, 32, 64]),
+       st.sampled_from([128, 256, 512]))
+@settings(max_examples=10, deadline=None)
+def test_attention_invariant_to_kv_block_size(seed, blk_a, s):
+    """The streamed online-softmax result must not depend on the block
+    split (the flash invariant)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31)), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, s, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, s, 1, 16), jnp.float32)
+    a = attention_streamed(q, k, v, causal=True, scale=0.25, kv_block=blk_a)
+    b = attention_streamed(q, k, v, causal=True, scale=0.25, kv_block=s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
+@settings(max_examples=15, deadline=None)
+def test_rope_preserves_norm_and_relativity(seed, shift):
+    """Rotations preserve per-head norms, and q·k depends only on the
+    position *difference*."""
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31)), 2)
+    q = jax.random.normal(ks[0], (1, 4, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 4, 2, 32), jnp.float32)
+    pos = jnp.arange(4)
+    q1, k1 = apply_rope(q, pos, 1e4), apply_rope(k, pos, 1e4)
+    q2, k2 = apply_rope(q, pos + shift, 1e4), apply_rope(k, pos + shift, 1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(q1), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+    s1 = jnp.einsum("bshd,bshd->bsh", q1, k1)
+    s2 = jnp.einsum("bshd,bshd->bsh", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-3)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_rmsnorm_scale_invariance(seed):
+    """rms_norm(c·x) == rms_norm(x) for any positive scalar c."""
+    key = jax.random.PRNGKey(seed % (2**31))
+    x = jax.random.normal(key, (3, 64), jnp.float32)
+    w = jnp.zeros((64,))
+    a = rms_norm(x, w)
+    b = rms_norm(x * 7.3, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([8, 16, 64]))
+@settings(max_examples=10, deadline=None)
+def test_ssd_chunk_size_invariance(seed, chunk):
+    """The chunked SSD dual form equals the sequential recurrence for any
+    chunk size, including non-dividing ones (ragged-tail padding)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed % (2**31)), 5)
+    b, s, h, p, g, n = 1, 72, 2, 8, 1, 16     # 72 % {16,64} != 0
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, g, n)) * 0.3
+    C = jax.random.normal(ks[4], (b, s, g, n)) * 0.3
+    y1, f1 = ssd_chunked(x, dt, A, B, C, chunk)
+    y2, f2 = ssd_sequential(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4,
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=2e-4,
+                               rtol=2e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_cross_entropy_bounds(seed):
+    """CE >= 0; CE of uniform logits == log(V)."""
+    key = jax.random.PRNGKey(seed % (2**31))
+    labels = jax.random.randint(key, (2, 8), 0, 32)
+    uniform = jnp.zeros((2, 8, 32))
+    np.testing.assert_allclose(float(cross_entropy(uniform, labels)),
+                               float(jnp.log(32.0)), rtol=1e-6)
+    logits = jax.random.normal(key, (2, 8, 32))
+    assert float(cross_entropy(logits, labels)) >= 0.0

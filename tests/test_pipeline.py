@@ -1,0 +1,81 @@
+"""Pipeline parallelism: the GPipe execution of AMTHA's stage plan must
+reproduce the sequential forward exactly, and be differentiable.
+Runs on a 4-device pod mesh in a subprocess."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def run_sub(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=540)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_pipeline_matches_sequential_and_differentiates():
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, reduced
+        from repro.launch.mesh import make_mesh
+        from repro.models.model import ShardCtx, forward, init_params
+        from repro.runtime.pipeline import make_pipelined_forward
+
+        cfg = reduced(ARCHS["glm4-9b"]).replace(dtype="float32", n_layers=4)
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        mesh = make_mesh((4,), ("pod",))
+        n_micro, bm, s = 3, 2, 16
+        tokens = jax.random.randint(key, (n_micro, bm, s), 0, cfg.vocab)
+
+        fwd = make_pipelined_forward(cfg, mesh, n_stages=4)
+        with mesh:
+            logits_pp = jax.jit(fwd)(params, tokens)
+
+        # sequential reference, microbatch by microbatch
+        ref = jnp.stack([
+            forward(params, {"tokens": tokens[i]}, cfg,
+                    ShardCtx(mode="train"))[0]
+            for i in range(n_micro)])
+        err = float(jnp.abs(logits_pp - ref).max())
+        print("pp fwd err:", err)
+        assert err < 2e-3, err
+
+        # differentiability: grad of a scalar loss through the pipeline
+        def loss(p):
+            lg = fwd(p, tokens)
+            return jnp.square(lg.astype(jnp.float32)).mean()
+        def loss_ref(p):
+            lg = jnp.stack([forward(p, {"tokens": tokens[i]}, cfg,
+                                    ShardCtx(mode="train"))[0]
+                            for i in range(n_micro)])
+            return jnp.square(lg.astype(jnp.float32)).mean()
+        with mesh:
+            g_pp = jax.jit(jax.grad(loss))(params)
+        g_ref = jax.grad(loss_ref)(params)
+        errs = [float(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)).max())
+                for a, b in zip(jax.tree.leaves(g_pp),
+                                jax.tree.leaves(g_ref))]
+        print("pp grad max err:", max(errs))
+        assert max(errs) < 5e-3, max(errs)
+        print("PIPELINE OK")
+    """)
+    assert "PIPELINE OK" in out
+
+
+def test_stage_plan_contiguous():
+    from repro.runtime.pipeline import plan_stages
+    per, sa = plan_stages(16, 2, 1e12, 1e8)
+    assert per == 8
+    # AMTHA keeps a single chain on one pod (no pipelining benefit for
+    # one chain) — the *executable* plan splits it for microbatch overlap;
+    # the schedule object is still a valid mapping
+    assert len(sa.layer_to_pod) == 16

@@ -1,0 +1,65 @@
+"""Tests for the beyond-paper placement layer (AMTHA -> JAX bridges) and
+the machine models."""
+
+import numpy as np
+import pytest
+
+from repro.core import (assign_layers_to_pods, dell_poweredge_1950,
+                        hp_bl260c, place_experts, tpu_v5e_pod)
+from repro.core.machine import TPU_V5E_PEAK_FLOPS
+
+
+def test_machine_hierarchy_levels():
+    m = dell_poweredge_1950()
+    assert m.n_cores == 8
+    # same pair -> L2 (fastest); same socket -> ram-local; cross -> slowest
+    assert m.comm_level(0, 1).name == "l2-pair"
+    assert m.comm_level(0, 2).name == "ram-local"
+    assert m.comm_level(0, 4).name == "ram-socket"
+    assert m.comm_time(1e6, 0, 1) < m.comm_time(1e6, 0, 2) < \
+        m.comm_time(1e6, 0, 4)
+
+
+def test_bl260c_network_is_slowest():
+    m = hp_bl260c()
+    assert m.n_cores == 64
+    assert m.comm_level(0, 8).name == "gigabit-eth"      # cross blade
+    assert m.comm_time(1e6, 0, 8) > m.comm_time(1e6, 0, 1) * 10
+
+
+def test_tpu_pod_machine():
+    m = tpu_v5e_pod(n_pods=2, chips_per_pod=4)
+    assert m.n_cores == 8
+    assert m.comm_level(0, 1).name == "ici"
+    assert m.comm_level(0, 4).name == "dci"
+    assert m.comm_time(1e9, 0, 4) > m.comm_time(1e9, 0, 1)
+
+
+def test_expert_placement_equal_groups_and_balance():
+    rng = np.random.default_rng(3)
+    loads = list(rng.lognormal(0, 1, 32) * 1e9)
+    pl = place_experts(loads, 4)
+    counts = [pl.expert_to_device.count(d) for d in range(4)]
+    assert counts == [8, 8, 8, 8]
+    dev = pl.device_loads(loads, 4)
+    # balanced within 2x of the ideal quarter
+    assert max(dev) < 2 * sum(loads) / 4
+    assert pl.t_est > 0
+
+
+def test_layer_to_pod_prefers_faster_pod():
+    flops = [1e12] * 8
+    acts = [1e8] * 7
+    fast = TPU_V5E_PEAK_FLOPS * 64
+    same = assign_layers_to_pods(flops, acts, [fast, fast])
+    # a single chain has no pipelining benefit: one pod hosts everything
+    assert len(set(same.layer_to_pod)) == 1
+    hetero = assign_layers_to_pods(flops, acts, [fast, 4 * fast])
+    assert set(hetero.layer_to_pod) == {1}       # all on the 4x pod
+    assert hetero.t_est < same.t_est
+
+
+def test_layer_graph_validates():
+    with pytest.raises(AssertionError):
+        from repro.core.placement import layer_graph
+        layer_graph([1e12] * 3, [1.0] * 5, [1e12])

@@ -1,0 +1,108 @@
+"""Hypothesis property tests over the system's invariants:
+
+* every AMTHA schedule of a random MPAHA graph is *valid* (precedence,
+  comm latency, chain order, no overlap, task coherence);
+* the zero-noise simulator reproduces T_est exactly (predictor and
+  executor agree on semantics);
+* contention can only slow execution down (T_exec >= T_est);
+* HEFT/ETF schedules are valid (without task coherence);
+* rank bookkeeping: AMTHA always terminates with every subtask placed
+  (progress guarantee of the cascade placement).
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SynthParams, amtha_schedule, etf_schedule,
+                        generate_app, heft_schedule, simulate, validate)
+from repro.core.machine import CommLevel, MachineModel
+
+
+@st.composite
+def machines(draw):
+    n_types = draw(st.integers(1, 3))
+    cores = []
+    locs = []
+    n_groups = draw(st.integers(1, 3))
+    per_group = draw(st.integers(1, 4))
+    for g in range(n_groups):
+        for c in range(per_group):
+            locs.append((g, c))
+            cores.append(draw(st.integers(0, n_types - 1)))
+    # make sure every type is represented (graph times index all types)
+    for t in range(n_types):
+        if t not in cores:
+            cores[t % len(cores)] = t
+    levels = [CommLevel("net", 1e-5, draw(st.floats(1e6, 1e9))),
+              CommLevel("ram", 1e-7, draw(st.floats(1e9, 1e11)))]
+    return MachineModel("hyp", cores, locs, levels, n_types=n_types)
+
+
+@st.composite
+def graphs_and_machines(draw):
+    m = draw(machines())
+    params = SynthParams(
+        n_tasks=(2, draw(st.integers(3, 14))),
+        subtasks_per_task=(1, draw(st.integers(2, 6))),
+        task_size_s=(0.5, draw(st.floats(1.0, 60.0))),
+        comm_volume=(10.0, draw(st.floats(100.0, 1e6))),
+        comm_probability=(0.05, draw(st.floats(0.1, 0.9))),
+        n_types=m.n_types,
+    )
+    g = generate_app(params, seed=draw(st.integers(0, 2**31 - 1)))
+    return g, m
+
+
+@given(graphs_and_machines())
+@settings(max_examples=40, deadline=None)
+def test_amtha_schedule_always_valid(gm):
+    g, m = gm
+    s = amtha_schedule(g, m)
+    validate(s, g, m)
+
+
+@given(graphs_and_machines())
+@settings(max_examples=25, deadline=None)
+def test_exact_simulation_matches_t_est(gm):
+    """The paper's T_est *is* the execution time under the model's own
+    semantics: a zero-noise, zero-contention simulation must land on it
+    exactly."""
+    g, m = gm
+    s = amtha_schedule(g, m)
+    r = simulate(g, m, s, contention=False, jitter=0.0)
+    assert abs(r.t_exec - s.makespan()) <= 1e-6 * max(1.0, s.makespan())
+
+
+@given(graphs_and_machines(), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_contention_never_speeds_up(gm, seed):
+    g, m = gm
+    s = amtha_schedule(g, m)
+    r = simulate(g, m, s, contention=True, jitter=0.0, seed=seed)
+    assert r.t_exec >= s.makespan() - 1e-9
+
+
+@given(graphs_and_machines())
+@settings(max_examples=20, deadline=None)
+def test_baselines_valid(gm):
+    g, m = gm
+    for fn in (heft_schedule, etf_schedule):
+        s = fn(g, m)
+        validate(s, g, m, require_task_coherence=False)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_expert_placement_never_worse_than_round_robin(seed):
+    from repro.core import place_experts, round_robin_placement
+    rng = np.random.default_rng(seed)
+    n_dev = int(rng.choice([4, 8, 16]))
+    loads = list(rng.zipf(1.4, n_dev * 8).astype(float) * 1e9)
+    a = place_experts(loads, n_dev)
+    r = round_robin_placement(loads, n_dev)
+    assert max(a.device_loads(loads, n_dev)) <= \
+        max(r.device_loads(loads, n_dev)) + 1e-6
+    # equal group sizes (sharding constraint)
+    counts = [a.expert_to_device.count(d) for d in range(n_dev)]
+    assert len(set(counts)) == 1
+    assert sorted(a.permutation) == list(range(len(loads)))

@@ -1,0 +1,124 @@
+"""End-to-end behaviour tests: the fault-tolerant trainer on a real
+(tiny) model, checkpoint/restart bit-exactness, the data pipeline's
+restart determinism, loss descent, and gradient compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models.model import ShardCtx
+from repro.optim.adamw import OptConfig
+from repro.runtime.train_loop import (Trainer, init_train_state,
+                                      make_train_step)
+
+CFG = reduced(ARCHS["gemma-2b"]).replace(dtype="float32", n_layers=2)
+OPT = OptConfig(lr=3e-3, warmup_steps=5, total_steps=200, weight_decay=0.0)
+
+
+def pipeline(batch=4, seq=32, seed=0):
+    return TokenPipeline(CFG, PipelineConfig(batch=batch, seq_len=seq,
+                                             seed=seed))
+
+
+def test_loss_descends_on_synthetic_stream():
+    """A few dozen steps on the Zipf stream must cut the loss well below
+    the uniform floor (the model learns the unigram distribution)."""
+    state = init_train_state(CFG, OPT, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, OPT, ShardCtx(mode="train")))
+    it = pipeline()
+    first = last = None
+    for i in range(40):
+        state, metrics = step(state, next(it))
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.5, (first, last)
+
+
+def test_trainer_checkpoint_and_restart(tmp_path):
+    """Trainer writes committed checkpoints; a fresh Trainer resumes from
+    them and the resumed state matches the saved one bit-exactly."""
+    from repro.checkpoint.ckpt import CheckpointManager
+    state = init_train_state(CFG, OPT, jax.random.PRNGKey(1))
+    tr = Trainer(CFG, OPT, ShardCtx(mode="train"), str(tmp_path),
+                 ckpt_every=5)
+    state, history, monitor = tr.run(state, pipeline(), n_steps=10)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.wait()
+    assert mgr.list_steps(), "no committed checkpoints"
+
+    restored = mgr.restore_latest(
+        init_train_state(CFG, OPT, jax.random.PRNGKey(2)))
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # resume and keep training
+    state2, h2, _ = tr.run(restored, pipeline(seed=9), n_steps=14)
+    assert int(state2["opt"]["step"]) == 14
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """Uncommitted (no COMMIT marker) checkpoints are invisible."""
+    from repro.checkpoint.ckpt import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    state = {"w": jnp.ones((4,))}
+    mgr.save(state, 5, block=True)
+    os.remove(os.path.join(str(tmp_path), "step_00000005", "COMMIT"))
+    assert mgr.list_steps() == []
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest(state)
+
+
+def test_pipeline_restart_determinism():
+    a = pipeline(seed=3)
+    b = pipeline(seed=3)
+    for _ in range(3):
+        next(b)
+    batch3 = next(b)            # step 3
+    for _ in range(3):
+        next(a)
+    np.testing.assert_array_equal(np.asarray(next(a)["tokens"]),
+                                  np.asarray(batch3["tokens"]))
+
+
+def test_grad_compression_error_feedback():
+    """int8-compressed training still descends, and the EF residual stays
+    bounded (compression noise does not accumulate)."""
+    opt = OptConfig(lr=3e-3, warmup_steps=5, total_steps=200,
+                    weight_decay=0.0, compression="int8")
+    state = init_train_state(CFG, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, opt, ShardCtx(mode="train")))
+    it = pipeline()
+    first = last = None
+    for i in range(40):
+        state, metrics = step(state, next(it))
+        first = first or float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.5
+    ef_norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                 for x in jax.tree.leaves(state["opt"]["ef"]))))
+    g_norm = float(metrics["grad_norm"])
+    assert ef_norm < 50 * max(g_norm, 1.0)
+
+
+def test_straggler_monitor_flags_outliers():
+    from repro.runtime.train_loop import StragglerMonitor
+    mon = StragglerMonitor(threshold=2.0)
+    for s in range(20):
+        assert not mon.record(s, 0.1)
+    assert mon.record(20, 0.5)
+    assert mon.flagged and mon.flagged[0][0] == 20
+
+
+def test_serve_smoke_after_init():
+    """Full serve path: prefill + iterated decode produce valid tokens."""
+    from repro.runtime.serve_loop import generate
+    state = init_train_state(CFG, OPT, jax.random.PRNGKey(0))
+    prompt = {"tokens": jnp.asarray([[1, 2, 3, 4]], jnp.int32)}
+    out = generate(CFG, ShardCtx(), state["params"], prompt, n_tokens=3)
+    assert out.shape == (1, 3)
+    assert bool((out >= 0).all()) and bool((out < CFG.vocab).all())
