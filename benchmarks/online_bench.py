@@ -1,0 +1,108 @@
+"""Online scheduling benchmark: throughput + tail latency vs arrival rate.
+
+    PYTHONPATH=src python -m benchmarks.online_bench [--quick] [--json PATH]
+
+For each machine × offered-load point a streaming workload is admitted
+through the incremental AMTHA (validating the full cluster timeline
+after *every* admission), then replayed through the contention
+simulator. Offered load rho is normalised per machine:
+
+    rate = rho * n_cores / E[serial work per app]
+
+so rho=0.3 is a lightly loaded cluster and rho=0.9 is near saturation
+on every machine. A second section compares admission policies at the
+saturating point. Results append to ``BENCH_online.json`` so successive
+PRs get a perf trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.core import cluster_of_multicores, dell_poweredge_1950, hp_bl260c
+from repro.online import ArrivalParams, evaluate, generate_workload, make_policy
+
+# E[n_tasks] * E[task size] for the small (8-core-regime) app class
+MEAN_APP_WORK_S = 20 * 27.5
+
+
+def run_point(machine, rho: float, n_apps: int, policy: str = "fifo",
+              p_large: float = 0.0, process: str = "poisson",
+              seed: int = 0, k: int = 4) -> dict:
+    rate = rho * machine.n_cores / MEAN_APP_WORK_S
+    params = ArrivalParams(rate=rate, process=process, p_large=p_large)
+    wl = generate_workload(params, n_apps=n_apps, seed=seed)
+    t0 = time.perf_counter()
+    state = make_policy(policy, k=k, validate_each=True).run(machine, wl)
+    sched_s = time.perf_counter() - t0
+    met = evaluate(state, contention=True)
+    row = {"machine": machine.name, "n_cores": machine.n_cores,
+           "rho": rho, "rate": rate, "policy": policy,
+           "process": process, "sched_wall_s": round(sched_s, 3)}
+    row.update({k_: round(float(v), 4) for k_, v in met.row().items()})
+    return row
+
+
+HDR = (f"{'machine':<34} {'rho':>4} {'policy':>8} {'thr(apps/s)':>12} "
+       f"{'mean_rt':>9} {'p99_rt':>9} {'miss%':>7} {'dif_rel%':>9} {'util':>6}")
+
+
+def show(row: dict) -> None:
+    print(f"{row['machine']:<34} {row['rho']:>4.2f} {row['policy']:>8} "
+          f"{row['throughput']:>12.5f} {row['mean_response']:>9.1f} "
+          f"{row['p99_response']:>9.1f} {100 * row['deadline_miss_rate']:>7.1f} "
+          f"{row['mean_dif_rel']:>9.2f} {row['utilization']:>6.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default="BENCH_online.json")
+    args = ap.parse_args()
+
+    quick = args.quick
+    n_apps = 8 if quick else 30
+    machines = [
+        dell_poweredge_1950(),
+        hp_bl260c(n_blades=2 if quick else 8),
+        cluster_of_multicores(n_blades=4),
+    ]
+    rhos = [0.3, 0.9]
+    rows: list[dict] = []
+
+    print("== Online AMTHA: throughput / tail latency vs offered load ==")
+    print(HDR)
+    for m in machines:
+        for rho in rhos:
+            row = run_point(m, rho, n_apps,
+                            p_large=0.0 if quick else 0.1,
+                            seed=7 + int(rho * 10))
+            rows.append(row)
+            show(row)
+
+    print("\n== Admission policies at saturation (rho=0.9, bursty) ==")
+    print(HDR)
+    m = machines[0]
+    for pol in ("fifo", "rank", "batched"):
+        row = run_point(m, 0.9, n_apps, policy=pol, process="bursty", seed=17)
+        rows.append(row)
+        show(row)
+
+    out = Path(args.json)
+    history = []
+    if out.exists():
+        try:
+            history = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"quick": quick, "rows": rows})
+    out.write_text(json.dumps(history, indent=1))
+    print(f"\nwrote {len(rows)} rows -> {out} "
+          f"(every admission validated against core.validate)")
+
+
+if __name__ == "__main__":
+    main()

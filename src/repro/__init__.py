@@ -2,10 +2,12 @@
 mapping + training/serving framework.
 
 Subpackages: ``core`` (the paper: MPAHA graphs, the AMTHA mapper,
-baselines, simulator/executor, AMTHA->JAX placement bridges), ``models``
-(10 architecture families), ``kernels`` (Pallas TPU), ``sharding``,
-``optim``, ``data``, ``checkpoint``, ``runtime``, ``configs``,
-``launch``. See DESIGN.md / EXPERIMENTS.md.
+baselines, simulator/executor, AMTHA->JAX placement bridges), ``online``
+(streaming multi-application scheduling: arrival processes, the shared
+cluster timeline, warm-started incremental AMTHA, admission policies,
+service metrics), ``models`` (10 architecture families), ``kernels``
+(Pallas TPU), ``sharding``, ``optim``, ``data``, ``checkpoint``,
+``runtime``, ``configs``, ``launch``. See DESIGN.md / EXPERIMENTS.md.
 """
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

@@ -6,9 +6,10 @@
 from .amtha import AMTHA, amtha_schedule
 from .executor import ExecResult, execute_threaded
 from .heft import etf_schedule, heft_schedule
-from .machine import (MachineModel, dell_poweredge_1950, heterogeneous_cluster,
-                      hp_bl260c, tpu_v5e_pod)
-from .mpaha import AppGraph, CommEdge, Subtask
+from .machine import (MachineModel, cluster_of_multicores,
+                      dell_poweredge_1950, heterogeneous_cluster, hp_bl260c,
+                      tpu_v5e_pod)
+from .mpaha import AppGraph, CommEdge, Subtask, merge_graphs
 from .placement import (assign_layers_to_pods, place_experts,
                         round_robin_placement)
 from .schedule import Schedule, ScheduleError, validate
@@ -18,7 +19,8 @@ from .synth import (SynthParams, generate_app, paper_suite_8core,
 
 __all__ = [
     "AMTHA", "amtha_schedule", "AppGraph", "CommEdge", "Subtask",
-    "MachineModel", "dell_poweredge_1950", "hp_bl260c",
+    "merge_graphs", "MachineModel", "cluster_of_multicores",
+    "dell_poweredge_1950", "hp_bl260c",
     "heterogeneous_cluster", "tpu_v5e_pod", "Schedule", "ScheduleError",
     "validate", "SimResult", "simulate", "ExecResult", "execute_threaded",
     "heft_schedule", "etf_schedule", "SynthParams", "generate_app",

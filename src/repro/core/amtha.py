@@ -32,15 +32,33 @@ from .schedule import Schedule
 
 
 class AMTHA:
-    def __init__(self, graph: AppGraph, machine: MachineModel):
+    """One-shot AMTHA, optionally *warm-started* against a partially
+    occupied machine.
+
+    ``warm_start`` — an existing :class:`Schedule` whose busy intervals
+    (other applications already admitted to the cluster) constrain the
+    gap search; it is mutated in place, so pass a ``copy()`` for a
+    tentative evaluation. ``release_time`` — no subtask of this graph may
+    start earlier (the app's arrival instant in the online setting).
+    ``sid_offset`` — this graph's local subtask ids are shifted by the
+    offset in the shared schedule, letting many apps coexist in one
+    timeline. Defaults reproduce the paper's offline behaviour exactly.
+    """
+
+    def __init__(self, graph: AppGraph, machine: MachineModel, *,
+                 warm_start: Schedule | None = None,
+                 release_time: float = 0.0,
+                 sid_offset: int = 0):
         if graph.n_types != machine.n_types:
             raise ValueError(
                 f"graph has {graph.n_types} processor types, "
                 f"machine has {machine.n_types}")
-        if not hasattr(graph, "preds"):
-            graph.finalize()
+        graph.finalize()
         self.g = graph
         self.m = machine
+        self.warm_start = warm_start
+        self.release = float(release_time)
+        self.off = int(sid_offset)
         self.type_counts = machine.type_counts()
         # cached per-subtask averages (Eq. 2)
         self.w_avg = [st.w_avg_over(self.type_counts) for st in graph.subtasks]
@@ -50,7 +68,9 @@ class AMTHA:
     # ------------------------------------------------------------------
     def run(self) -> Schedule:
         g, m = self.g, self.m
-        self.schedule = Schedule(m.n_cores)
+        self.schedule = self.warm_start if self.warm_start is not None \
+            else Schedule(m.n_cores)
+        placed_before = len(self.schedule.placements)
         self.unplaced_preds = [len(g.preds[s]) for s in range(g.n_subtasks)]
         self.rank: dict[int, float] = {t: 0.0 for t in g.tasks}
         for s in range(g.n_subtasks):
@@ -65,7 +85,7 @@ class AMTHA:
             p = self._select_processor(t)
             self._assign(t, p)          # steps 3 + 4 (rank updates inline)
             self.rank[t] = -1.0
-        assert len(self.schedule.placements) == g.n_subtasks, \
+        assert len(self.schedule.placements) - placed_before == g.n_subtasks, \
             f"unplaced subtasks remain: {self.in_lnu}"
         return self.schedule
 
@@ -100,18 +120,19 @@ class AMTHA:
         prefix) + sum over LNU_p ∪ blocked-suffix of exec times on p.
         """
         g, m, sch = self.g, self.m, self.schedule
+        off = self.off
         ptype = m.core_types[p]
         tentative_end: dict[int, float] = {}
         blocked_from = None
         last_end = 0.0
         for k, sid in enumerate(g.tasks[t]):
-            ready = 0.0
+            ready = self.release
             placeable = True
             for pred, vol in g.preds[sid]:
                 if pred in tentative_end:                 # earlier chain subtask
                     ready = max(ready, tentative_end[pred])
-                elif pred in sch.placements:
-                    q = sch.placements[pred]
+                elif off + pred in sch.placements:
+                    q = sch.placements[off + pred]
                     ready = max(ready, q.end + m.comm_time(vol, q.core, p))
                 else:
                     placeable = False
@@ -127,7 +148,7 @@ class AMTHA:
         if blocked_from is None:
             return last_end                                # case 1
         # case 2: LU_p finish + pending execution times
-        lu_finish = max(sch.core_available(p), last_end)
+        lu_finish = max(sch.core_available(p), last_end, self.release)
         pending = sum(g.subtasks[s].time_on(ptype) for s in self.lnu[p])
         pending += sum(g.subtasks[s].time_on(ptype)
                        for s in g.tasks[t][blocked_from:])
@@ -154,13 +175,13 @@ class AMTHA:
         g, m, sch = self.g, self.m, self.schedule
         p = self.assigned_core[g.subtasks[sid].task_id]
         ptype = m.core_types[p]
-        ready = 0.0
+        ready = self.release
         for pred, vol in g.preds[sid]:
-            q = sch.placements[pred]
+            q = sch.placements[self.off + pred]
             ready = max(ready, q.end + m.comm_time(vol, q.core, p))
         dur = g.subtasks[sid].time_on(ptype)
         start = sch.earliest_slot(p, ready, dur)
-        sch.place(sid, p, start, start + dur)
+        sch.place(self.off + sid, p, start, start + dur)
 
         # §3.5: successors whose predecessors became all-placed either
         # (a) cascade-place if their task is already assigned, or
@@ -178,6 +199,12 @@ class AMTHA:
                     self.rank[task] += self.w_avg[succ]
 
 
-def amtha_schedule(graph: AppGraph, machine: MachineModel) -> Schedule:
-    """Run AMTHA; ``schedule.makespan()`` is the paper's T_est."""
-    return AMTHA(graph, machine).run()
+def amtha_schedule(graph: AppGraph, machine: MachineModel, *,
+                   warm_start: Schedule | None = None,
+                   release_time: float = 0.0,
+                   sid_offset: int = 0) -> Schedule:
+    """Run AMTHA; ``schedule.makespan()`` is the paper's T_est. The
+    keyword arguments enable incremental (online) use — see
+    :class:`AMTHA` and ``repro.online``."""
+    return AMTHA(graph, machine, warm_start=warm_start,
+                 release_time=release_time, sid_offset=sid_offset).run()

@@ -34,8 +34,7 @@ def execute_threaded(graph: AppGraph, machine: MachineModel,
                      schedule: Schedule, time_scale: float = 1e-3) -> ExecResult:
     """``time_scale`` maps model seconds to wall seconds (5-50 s subtasks
     -> 5-50 ms sleeps)."""
-    if not hasattr(graph, "preds"):
-        graph.finalize()
+    graph.finalize()
 
     done_evt = {s: threading.Event() for s in range(graph.n_subtasks)}
     done_at = [0.0] * graph.n_subtasks

@@ -26,8 +26,7 @@ def _avg_comm_time(machine: MachineModel, volume: float) -> float:
 
 
 def heft_schedule(graph: AppGraph, machine: MachineModel) -> Schedule:
-    if not hasattr(graph, "preds"):
-        graph.finalize()
+    graph.finalize()
     type_counts = machine.type_counts()
     w = [st.w_avg_over(type_counts) for st in graph.subtasks]
 
@@ -69,8 +68,7 @@ def heft_schedule(graph: AppGraph, machine: MachineModel) -> Schedule:
 def etf_schedule(graph: AppGraph, machine: MachineModel) -> Schedule:
     """Earliest-Task-First greedy: repeatedly place the (ready subtask,
     core) pair with the earliest start time. A weaker baseline than HEFT."""
-    if not hasattr(graph, "preds"):
-        graph.finalize()
+    graph.finalize()
     schedule = Schedule(machine.n_cores)
     unplaced_preds = [len(graph.preds[s]) for s in range(graph.n_subtasks)]
     ready = {s for s in range(graph.n_subtasks) if unplaced_preds[s] == 0}

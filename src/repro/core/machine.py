@@ -137,6 +137,32 @@ def heterogeneous_cluster(n_fast: int = 4, n_slow: int = 4) -> MachineModel:
     return MachineModel("hetero 2-type cluster", types, locations, levels)
 
 
+def cluster_of_multicores(n_blades: int = 4, sockets_per_blade: int = 2,
+                          pairs_per_socket: int = 2, n_types: int = 1) -> MachineModel:
+    """The paper's closing target (§7): "clusters of multicores". Each
+    blade is a PowerEdge-style multicore (sockets × shared-L2 core
+    pairs); blades are joined by a 10 GbE fabric, one hierarchy level
+    above the intra-blade memory levels. With ``n_types > 1`` alternate
+    blades get faster/slower cores so the online scheduler also exercises
+    heterogeneity. Location = (blade, socket, pair, core)."""
+    locations, types = [], []
+    for blade in range(n_blades):
+        for socket in range(sockets_per_blade):
+            for pair in range(pairs_per_socket):
+                for core in range(2):
+                    locations.append((blade, socket, pair, core))
+                    types.append(blade % n_types)
+    levels = [
+        CommLevel("10gbe", 2e-5, 1.1e9),        # inter-blade fabric
+        CommLevel("ram-socket", 4e-7, 3.0e9),
+        CommLevel("ram-local", 3e-7, 5.0e9),
+        CommLevel("l2-pair", 5e-8, 2.0e10),
+    ]
+    n_cores = n_blades * sockets_per_blade * pairs_per_socket * 2
+    return MachineModel(f"cluster-of-multicores ({n_blades}x{n_cores // n_blades} cores)",
+                        types, locations, levels)
+
+
 # TPU v5e constants used framework-wide (also by the roofline analysis).
 TPU_V5E_PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 TPU_V5E_HBM_BW = 819e9               # bytes/s per chip

@@ -80,7 +80,14 @@ class AppGraph:
     # ---- derived structure (cached) -----------------------------------
     def finalize(self) -> None:
         """Build predecessor/successor maps. Chain edges are implicit:
-        subtask k of a task depends on subtask k-1 of the same task."""
+        subtask k of a task depends on subtask k-1 of the same task.
+
+        Idempotent: callers invoke it unconditionally; a repeat call with
+        an unchanged graph is a no-op, and adding tasks/edges after a
+        finalize simply rebuilds the maps."""
+        fp = (len(self.subtasks), len(self.edges))
+        if getattr(self, "_finalized", None) == fp:
+            return
         n = len(self.subtasks)
         self.preds: list[list[tuple[int, float]]] = [[] for _ in range(n)]
         self.succs: list[list[tuple[int, float]]] = [[] for _ in range(n)]
@@ -92,6 +99,7 @@ class AppGraph:
             self.preds[e.dst].append((e.src, e.volume))
             self.succs[e.src].append((e.dst, e.volume))
         self._check_acyclic()
+        self._finalized = fp
 
     def _check_acyclic(self) -> None:
         n = len(self.subtasks)
@@ -122,3 +130,35 @@ class AppGraph:
 
     def task_ids(self) -> list[int]:
         return sorted(self.tasks)
+
+
+def merge_graphs(graphs: list[AppGraph]) -> tuple[AppGraph, list[int]]:
+    """Disjoint union of independent applications into one MPAHA graph.
+
+    Returns the merged graph plus, per input graph, the subtask-id offset
+    its local sids were shifted by (task ids are shifted the same way the
+    online subsystem shifts them: by the running task count). Used to
+    validate and simulate a whole cluster timeline at once.
+    """
+    if not graphs:
+        raise ValueError("merge_graphs needs at least one graph")
+    n_types = graphs[0].n_types
+    if any(g.n_types != n_types for g in graphs):
+        raise ValueError("all graphs must share the processor-type space")
+    merged = AppGraph(n_types=n_types)
+    offsets: list[int] = []
+    task_off = 0
+    for g in graphs:
+        off = len(merged.subtasks)
+        offsets.append(off)
+        for st in g.subtasks:               # sid order => merged sid = off + sid
+            merged.subtasks.append(
+                Subtask(off + st.sid, task_off + st.task_id,
+                        st.index_in_task, st.times))
+        for tid, sids in g.tasks.items():
+            merged.tasks[task_off + tid] = [off + s for s in sids]
+        for e in g.edges:
+            merged.edges.append(CommEdge(off + e.src, off + e.dst, e.volume))
+        task_off += max(g.tasks, default=-1) + 1
+    merged.finalize()
+    return merged, offsets

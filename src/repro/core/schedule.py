@@ -56,6 +56,38 @@ class Schedule:
         slots = self.core_slots[core]
         return slots[-1][1] if slots else 0.0
 
+    def gaps(self, core: int, horizon: float = float("inf"),
+             after: float = 0.0) -> list[tuple[float, float]]:
+        """Free intervals on ``core`` within [after, horizon), last one
+        open-ended to ``horizon``. The residual capacity the online
+        scheduler packs newly arriving apps into."""
+        out: list[tuple[float, float]] = []
+        prev_end = after
+        for s, e, _ in self.core_slots[core]:
+            if s > prev_end + 1e-15:
+                out.append((prev_end, min(s, horizon)))
+            prev_end = max(prev_end, e)
+        if prev_end < horizon:
+            out.append((prev_end, horizon))
+        return [(a, b) for a, b in out if b > a + 1e-15]
+
+    def copy(self) -> "Schedule":
+        """Deep-enough copy: placements and slot lists are fresh, so a
+        tentative admission can mutate the copy without committing."""
+        c = Schedule(self.n_cores)
+        c.placements = dict(self.placements)
+        c.core_slots = [list(slots) for slots in self.core_slots]
+        return c
+
+    def merge_from(self, other: "Schedule") -> None:
+        """Adopt every placement of ``other`` not already present (used to
+        commit a tentatively scheduled app into the cluster timeline)."""
+        if other.n_cores != self.n_cores:
+            raise ValueError("core-count mismatch")
+        for sid, p in other.placements.items():
+            if sid not in self.placements:
+                self.place(sid, p.core, p.start, p.end)
+
     # ---- queries --------------------------------------------------------
     def makespan(self) -> float:
         if not self.placements:

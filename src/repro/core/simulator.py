@@ -45,9 +45,15 @@ class SimResult:
 
 def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
              contention: bool = True, jitter: float = 0.0,
-             seed: int = 0) -> SimResult:
-    if not hasattr(graph, "preds"):
-        graph.finalize()
+             seed: int = 0,
+             releases: dict[int, float] | None = None) -> SimResult:
+    """``releases`` is the event-driven injection hook for the online
+    subsystem: ``releases[sid] = t`` holds subtask ``sid`` back until
+    simulated time ``t`` (an application arriving mid-simulation is just
+    its subtasks carrying ``t = arrival``). Release events enter the same
+    event heap as everything else, so cores that idle past an injection
+    instant pick the new work up in order."""
+    graph.finalize()
     rng = np.random.default_rng(seed)
 
     core_order = [schedule.order_on_core(c) for c in range(machine.n_cores)]
@@ -135,6 +141,15 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
             fluid_dt = dt - lat_used
             if fluid_dt > 0:
                 rec[0] -= fluid_dt * transfer_rate(rec[1])
+
+    # injection hook: a pending release counts as one more predecessor
+    # whose "data" arrives at the release instant
+    if releases:
+        for sid, t_rel in releases.items():
+            if t_rel > 0.0:
+                arrivals_pending[sid] += 1
+                heapq.heappush(events, (float(t_rel), seq, "arrive", sid))
+                seq += 1
 
     # bootstrap: subtasks with no preds can start
     for core in range(machine.n_cores):

@@ -1,0 +1,78 @@
+"""Incremental AMTHA: admit one application against residual capacity.
+
+The offline algorithm (Fig. 3 of the paper) is unchanged — rank
+selection, LU/LNU-aware processor choice, cascade gap placement. What
+changes is the machine it sees: instead of an empty ``Schedule`` it
+warm-starts on the cluster's occupied timeline, so the §3.4 gap search
+("a free interval between two subtasks already placed in p, or an
+interval after them") now packs the new app into holes left by earlier
+apps, and no subtask may start before the app's arrival instant.
+
+On an idle cluster at t=0 this degenerates to the paper's offline run
+exactly — a property the tests pin down (warm == cold).
+"""
+
+from __future__ import annotations
+
+from ..core.amtha import AMTHA
+from ..core.machine import MachineModel
+from .arrivals import AppArrival
+from .state import AdmittedApp, ClusterState
+
+
+class OnlineAMTHA:
+    """Admission engine over a :class:`ClusterState`."""
+
+    def __init__(self, machine: MachineModel):
+        self.machine = machine
+        self.state = ClusterState(machine)
+
+    # ------------------------------------------------------------------
+    def predict(self, arrival: AppArrival, at: float | None = None) -> float:
+        """Predicted finish if ``arrival`` were admitted now — evaluated
+        on a throwaway copy of the timeline, nothing committed. This is
+        the cheap what-if the policies use to order/filter a queue."""
+        t = arrival.t_arrival if at is None else at
+        trial = self.state.schedule.copy()
+        off = self.state.peek_offset()      # peek, do not reserve
+        # same floor admit() would use: never before the cluster clock
+        release = max(self.state.now, t, arrival.t_arrival)
+        AMTHA(arrival.graph, self.machine, warm_start=trial,
+              release_time=release, sid_offset=off).run()
+        return max(trial.placements[off + s].end
+                   for s in range(arrival.graph.n_subtasks))
+
+    def admit(self, arrival: AppArrival, at: float | None = None) -> AdmittedApp:
+        """Schedule ``arrival`` into the live timeline and commit it.
+
+        ``at`` — the admission instant (defaults to the arrival time;
+        batched policies admit later than the app arrived). The release
+        floor is ``max(at, t_arrival)``: a queued app still cannot start
+        before it was admitted.
+        """
+        t = arrival.t_arrival if at is None else at
+        self.state.advance_to(t)
+        # transactional: schedule onto a copy, commit only on success, so
+        # a failed admission (type mismatch, mid-run assert) leaves the
+        # cluster state untouched
+        off = self.state.peek_offset()
+        trial = self.state.schedule.copy()
+        AMTHA(arrival.graph, self.machine,
+              warm_start=trial,
+              release_time=max(t, arrival.t_arrival),
+              sid_offset=off).run()
+        reserved = self.state.allot_offset(arrival.graph)
+        assert reserved == off
+        self.state.schedule.merge_from(trial)
+        return self.state.commit(arrival, off, t_admit=t)
+
+
+def replay_fifo(machine: MachineModel, workload: list[AppArrival],
+                validate_each: bool = False) -> ClusterState:
+    """Convenience: admit a whole workload first-come-first-served."""
+    eng = OnlineAMTHA(machine)
+    for arr in sorted(workload, key=lambda a: a.t_arrival):
+        eng.admit(arr)
+        if validate_each:
+            eng.state.validate()
+    return eng.state

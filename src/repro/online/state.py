@@ -1,0 +1,146 @@
+"""Mutable cluster state: the shared timeline many applications live in.
+
+``ClusterState`` wraps one global :class:`~repro.core.schedule.Schedule`
+whose subtask ids are namespaced per admitted app (each app gets a
+``sid_offset``), plus per-core *frontiers* — the earliest instant each
+core can take new work, which is ``max(now, last reserved end)``. A new
+app is scheduled against this residual capacity (the gap lists of the
+occupied timeline) instead of an empty machine; that is the whole
+difference between the paper's offline AMTHA and the online subsystem.
+
+The state can always reconstitute a single offline-equivalent picture of
+itself — ``merged_graph()`` unions all admitted apps (with the same sid
+offsets the schedule uses) so ``core.validate`` and ``core.simulate``
+apply unchanged to the multiprogrammed timeline.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..core.machine import MachineModel
+from ..core.mpaha import AppGraph, merge_graphs
+from ..core.schedule import Schedule, validate
+from .arrivals import AppArrival
+
+
+@dataclass
+class AdmittedApp:
+    """Bookkeeping for one application committed to the timeline."""
+
+    arrival: AppArrival
+    sid_offset: int
+    t_admit: float                  # when the scheduler placed it
+    t_est_finish: float             # predicted finish (schedule end)
+
+    @property
+    def app_id(self) -> int:
+        return self.arrival.app_id
+
+    @property
+    def est_response(self) -> float:
+        return self.t_est_finish - self.arrival.t_arrival
+
+    @property
+    def est_meets_deadline(self) -> bool:
+        return self.t_est_finish <= self.arrival.deadline + 1e-9
+
+    def global_sids(self) -> range:
+        return range(self.sid_offset,
+                     self.sid_offset + self.arrival.graph.n_subtasks)
+
+
+class ClusterState:
+    """The residual-capacity view AMTHA warm-starts against."""
+
+    def __init__(self, machine: MachineModel):
+        self.machine = machine
+        self.schedule = Schedule(machine.n_cores)
+        self.apps: list[AdmittedApp] = []
+        self.now = 0.0
+        self._next_sid = 0
+
+    # ---- clock ---------------------------------------------------------
+    def advance_to(self, t: float) -> None:
+        if t < self.now - 1e-9:
+            raise ValueError(f"time moves forward: {t} < {self.now}")
+        self.now = max(self.now, t)
+
+    # ---- residual capacity --------------------------------------------
+    def frontier(self, core: int) -> float:
+        """Earliest instant ``core`` can take *appended* work."""
+        return max(self.now, self.schedule.core_available(core))
+
+    def frontiers(self) -> list[float]:
+        return [self.frontier(c) for c in range(self.machine.n_cores)]
+
+    def gaps(self, core: int, horizon: float = float("inf")) -> list[tuple[float, float]]:
+        """Free intervals on ``core`` from ``now`` on (incl. the open end)."""
+        return self.schedule.gaps(core, horizon=horizon, after=self.now)
+
+    def utilization(self, horizon: float | None = None) -> float:
+        """Busy fraction of the machine over [0, horizon]."""
+        h = horizon if horizon is not None else self.schedule.makespan()
+        if h <= 0.0:
+            return 0.0
+        busy = sum(min(e, h) - min(s, h)
+                   for slots in self.schedule.core_slots
+                   for s, e, _ in slots)
+        return busy / (h * self.machine.n_cores)
+
+    # ---- admission bookkeeping ----------------------------------------
+    def peek_offset(self) -> int:
+        """The sid offset the next admitted app will get (not reserved)."""
+        return self._next_sid
+
+    def allot_offset(self, graph: AppGraph) -> int:
+        """Reserve the sid namespace for the next admitted app."""
+        off = self._next_sid
+        self._next_sid += graph.n_subtasks
+        return off
+
+    def commit(self, arrival: AppArrival, sid_offset: int,
+               t_admit: float) -> AdmittedApp:
+        ends = [self.schedule.placements[s].end
+                for s in range(sid_offset, sid_offset + arrival.graph.n_subtasks)]
+        app = AdmittedApp(arrival=arrival, sid_offset=sid_offset,
+                          t_admit=t_admit, t_est_finish=max(ends))
+        self.apps.append(app)
+        return app
+
+    @property
+    def n_admitted(self) -> int:
+        return len(self.apps)
+
+    # ---- whole-cluster views ------------------------------------------
+    def merged_graph(self) -> AppGraph:
+        """All admitted apps as one MPAHA graph, sid-aligned with the
+        global schedule."""
+        merged, offsets = merge_graphs([a.arrival.graph for a in self.apps])
+        assert offsets == [a.sid_offset for a in self.apps], \
+            "admission order and sid namespace drifted apart"
+        return merged
+
+    def releases(self) -> dict[int, float]:
+        """Per-subtask release instants for the simulator's injection
+        hook: an app's root subtasks may not start before it arrived."""
+        rel: dict[int, float] = {}
+        for a in self.apps:
+            g = a.arrival.graph
+            g.finalize()
+            for s in range(g.n_subtasks):
+                if not g.preds[s]:
+                    rel[a.sid_offset + s] = a.arrival.t_arrival
+        return rel
+
+    def validate(self) -> None:
+        """Every offline invariant, on the multiprogrammed timeline —
+        plus online causality: nothing starts before its app arrived."""
+        if not self.apps:
+            return
+        validate(self.schedule, self.merged_graph(), self.machine)
+        for a in self.apps:
+            for s in a.global_sids():
+                if self.schedule.placements[s].start < a.arrival.t_arrival - 1e-9:
+                    raise AssertionError(
+                        f"app {a.app_id}: subtask {s} starts before arrival")

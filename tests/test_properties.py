@@ -11,6 +11,9 @@
 """
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (SynthParams, amtha_schedule, etf_schedule,
