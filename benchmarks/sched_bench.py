@@ -1,0 +1,189 @@
+"""Scheduling-engine benchmark: array engine vs seed AMTHA.
+
+    PYTHONPATH=src python -m benchmarks.sched_bench [--quick] [--json PATH]
+
+Three sections, all equivalence-checked while they time:
+
+* **offline** — scheduler throughput (placements/sec) vs graph size.
+  The seed ``AMTHA`` (Schedule-backed: O(slots) gap scans, per-place
+  sorted inserts) against ``ArrayAMTHA`` (Timeline-backed: bisect gap
+  search, heap task selection, matrix-vectorized processor selection).
+  Placements must match bit-for-bit or the row is refused.
+* **whatif** — online admission latency vs timeline length. The seed
+  what-if (``Schedule.copy()`` of the whole cluster timeline + seed
+  AMTHA) against the transactional path (journal ``begin``/``rollback``
+  on the live Timeline), at growing numbers of admitted apps.
+* **kernel** — ``BatchedPolicy``'s concurrent-evaluation path: one
+  batch ordered by per-app exact transactional what-ifs vs one batched
+  ``sched_score`` call over the (apps × cores) candidate matrix.
+
+Results append to ``BENCH_sched.json`` so successive PRs get a perf
+trajectory. ``--quick`` is the CI smoke shape (small sizes, seconds);
+the committed full run covers 2k and 5k subtasks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from repro.core import (AMTHA, SynthParams, amtha_schedule,
+                        dell_poweredge_1950, engine_schedule, generate_app)
+from repro.online import ArrivalParams, OnlineAMTHA, generate_workload
+from repro.online.policies import BatchedPolicy
+
+
+def _pmap(s):
+    return {sid: (p.core, p.start, p.end) for sid, p in s.placements.items()}
+
+
+def app_with_subtasks(n_sub: int, seed: int = 5):
+    """One synthetic app sized to ~n_sub subtasks (§5.1 generator with
+    the task count scaled; ~4.5 subtasks/task on average)."""
+    k = max(2, round(n_sub / 4.5))
+    return generate_app(SynthParams(n_tasks=(k, k)), seed=seed)
+
+
+# ---------------------------------------------------------------------------
+def bench_offline(sizes: list[int]) -> list[dict]:
+    m = dell_poweredge_1950()
+    rows = []
+    print("== offline: throughput vs graph size (dell-poweredge-1950) ==")
+    print(f"{'subtasks':>9} {'seed_s':>9} {'engine_s':>9} {'seed pl/s':>10} "
+          f"{'engine pl/s':>11} {'speedup':>8}")
+    for n in sizes:
+        g = app_with_subtasks(n)
+        t0 = time.perf_counter()
+        a = amtha_schedule(g, m)
+        t1 = time.perf_counter()
+        b = engine_schedule(g, m)
+        t2 = time.perf_counter()
+        if _pmap(a) != _pmap(b):
+            raise AssertionError(f"engine diverged from seed at n={n}")
+        seed_s, eng_s = t1 - t0, t2 - t1
+        row = {"n_subtasks": g.n_subtasks, "n_cores": m.n_cores,
+               "seed_s": round(seed_s, 4), "engine_s": round(eng_s, 4),
+               "seed_placements_per_s": round(g.n_subtasks / seed_s, 1),
+               "engine_placements_per_s": round(g.n_subtasks / eng_s, 1),
+               "speedup": round(seed_s / eng_s, 2)}
+        rows.append(row)
+        print(f"{row['n_subtasks']:>9} {seed_s:>9.3f} {eng_s:>9.3f} "
+              f"{row['seed_placements_per_s']:>10.0f} "
+              f"{row['engine_placements_per_s']:>11.0f} "
+              f"{row['speedup']:>7.1f}x")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def bench_whatif(checkpoints: list[int], reps: int = 10) -> list[dict]:
+    m = dell_poweredge_1950()
+    wl = generate_workload(ArrivalParams(rate=0.05), max(checkpoints) + 1,
+                           seed=3)
+    eng = OnlineAMTHA(m)
+    probe = wl[-1]
+    rows = []
+    admitted = 0
+    print("\n== online what-if: admission-scoring latency vs timeline length ==")
+    print(f"{'apps':>5} {'slots':>7} {'copy_ms':>9} {'txn_ms':>8} {'speedup':>8}")
+    for target in checkpoints:
+        while admitted < target:
+            eng.admit(wl[admitted])
+            admitted += 1
+        off = eng.state.peek_offset()
+        rel = max(eng.state.now, probe.t_arrival)
+        n = probe.graph.n_subtasks
+        # seed baseline: whole-timeline copy + seed AMTHA on Schedule
+        sched = eng.state.schedule.to_schedule()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            trial = sched.copy()
+            AMTHA(probe.graph, m, warm_start=trial,
+                  release_time=rel, sid_offset=off).run()
+            fin_copy = max(trial.placements[off + s].end for s in range(n))
+        copy_s = (time.perf_counter() - t0) / reps
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fin_txn = eng.predict(probe, at=eng.state.now)
+        txn_s = (time.perf_counter() - t0) / reps
+        if fin_copy != fin_txn:
+            raise AssertionError("what-if paths disagree on finish time")
+        slots = len(eng.state.schedule.placements)
+        row = {"apps": target, "timeline_placements": slots,
+               "copy_ms": round(copy_s * 1e3, 3),
+               "txn_ms": round(txn_s * 1e3, 3),
+               "speedup": round(copy_s / txn_s, 2)}
+        rows.append(row)
+        print(f"{target:>5} {slots:>7} {row['copy_ms']:>9.2f} "
+              f"{row['txn_ms']:>8.2f} {row['speedup']:>7.1f}x")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def bench_kernel(n_admitted: int, batch: int) -> list[dict]:
+    m = dell_poweredge_1950()
+    wl = generate_workload(ArrivalParams(rate=0.05), n_admitted + batch,
+                           seed=11)
+    eng = OnlineAMTHA(m)
+    for a in wl[:n_admitted]:
+        eng.admit(a)
+    queue = wl[n_admitted:]
+    now = eng.state.now
+    pol = BatchedPolicy(k=batch)
+    pol.kernel_scores(queue, eng, now)          # warm-up (jit compile)
+    t0 = time.perf_counter()
+    exact = [(eng.predict(a, at=now) - now, a.app_id) for a in queue]
+    exact_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    scores = pol.kernel_scores(queue, eng, now)
+    kern_s = time.perf_counter() - t0
+    # rank agreement between screening order and exact order
+    exact_order = [i for _, i in sorted(exact)]
+    kern_order = [a.app_id for s, a in sorted(zip(scores, queue),
+                                              key=lambda x: (x[0], x[1].app_id))]
+    agree = sum(a == b for a, b in zip(exact_order, kern_order)) / batch
+    row = {"batch": batch, "timeline_apps": n_admitted,
+           "exact_ms": round(exact_s * 1e3, 3),
+           "kernel_ms": round(kern_s * 1e3, 3),
+           "speedup": round(exact_s / kern_s, 2),
+           "order_agreement": round(agree, 3)}
+    print("\n== batched admission scoring: exact what-ifs vs sched_score ==")
+    print(f"batch={batch} on {n_admitted}-app timeline: "
+          f"exact {row['exact_ms']:.1f} ms, kernel {row['kernel_ms']:.2f} ms "
+          f"-> {row['speedup']:.0f}x (order agreement {agree:.0%})")
+    return [row]
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default="BENCH_sched.json")
+    args = ap.parse_args()
+
+    if args.quick:
+        offline = bench_offline([250, 600])
+        whatif = bench_whatif([4, 10], reps=3)
+        kernel = bench_kernel(n_admitted=10, batch=6)
+    else:
+        offline = bench_offline([250, 500, 1000, 2000, 5000])
+        whatif = bench_whatif([5, 10, 20, 40], reps=10)
+        kernel = bench_kernel(n_admitted=39, batch=8)
+
+    out = Path(args.json)
+    history = []
+    if out.exists():
+        try:
+            history = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"quick": args.quick, "offline": offline,
+                    "whatif": whatif, "kernel": kernel})
+    out.write_text(json.dumps(history, indent=1))
+    print(f"\nwrote offline/whatif/kernel sections -> {out} "
+          f"(every timed row equivalence-checked against the seed)")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,7 @@
 # the §5.1 synthetic-app generator) and the beyond-paper placement layer
 # that plugs AMTHA into the JAX framework (expert + layer/pod mapping).
 from .amtha import AMTHA, amtha_schedule
+from .engine import ArrayAMTHA, engine_schedule
 from .executor import ExecResult, execute_threaded
 from .heft import etf_schedule, heft_schedule
 from .machine import (MachineModel, cluster_of_multicores,
@@ -14,11 +15,13 @@ from .placement import (assign_layers_to_pods, place_experts,
                         round_robin_placement)
 from .schedule import Schedule, ScheduleError, validate
 from .simulator import SimResult, simulate
+from .timeline import Timeline
 from .synth import (SynthParams, generate_app, paper_suite_8core,
                     paper_suite_64core)
 
 __all__ = [
-    "AMTHA", "amtha_schedule", "AppGraph", "CommEdge", "Subtask",
+    "AMTHA", "amtha_schedule", "ArrayAMTHA", "engine_schedule", "Timeline",
+    "AppGraph", "CommEdge", "Subtask",
     "merge_graphs", "MachineModel", "cluster_of_multicores",
     "dell_poweredge_1950", "hp_bl260c",
     "heterogeneous_cluster", "tpu_v5e_pod", "Schedule", "ScheduleError",

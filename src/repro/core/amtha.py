@@ -77,7 +77,10 @@ class AMTHA:
             if self.unplaced_preds[s] == 0:
                 self.rank[g.subtasks[s].task_id] += self.w_avg[s]
         self.assigned_core: dict[int, int] = {}
-        self.lnu: list[list[int]] = [[] for _ in range(m.n_cores)]
+        # per-core LNU as insertion-ordered dicts: iteration order matches
+        # the paper's pending list, removal on cascade placement is O(1)
+        # (a list's .remove() made deep-LNU cascades quadratic)
+        self.lnu: list[dict[int, None]] = [{} for _ in range(m.n_cores)]
         self.in_lnu: set[int] = set()
 
         for _ in range(len(g.tasks)):
@@ -166,7 +169,7 @@ class AMTHA:
             if self.unplaced_preds[sid] == 0:
                 queue.append(sid)
             else:
-                self.lnu[p].append(sid)
+                self.lnu[p][sid] = None
                 self.in_lnu.add(sid)
         while queue:
             self._place(queue.popleft(), queue)
@@ -182,10 +185,14 @@ class AMTHA:
         dur = g.subtasks[sid].time_on(ptype)
         start = sch.earliest_slot(p, ready, dur)
         sch.place(self.off + sid, p, start, start + dur)
+        self._on_placed(sid, queue)
 
+    def _on_placed(self, sid: int, queue: deque[int]) -> None:
         # §3.5: successors whose predecessors became all-placed either
         # (a) cascade-place if their task is already assigned, or
-        # (b) add W_avg to their task's rank.
+        # (b) add W_avg to their task's rank. Shared with the array
+        # engine — placement identity depends on this single block.
+        g = self.g
         for succ, _ in g.succs[sid]:
             self.unplaced_preds[succ] -= 1
             if self.unplaced_preds[succ] == 0:
@@ -193,7 +200,7 @@ class AMTHA:
                 if task in self.assigned_core:
                     if succ in self.in_lnu:
                         self.in_lnu.discard(succ)
-                        self.lnu[self.assigned_core[task]].remove(succ)
+                        del self.lnu[self.assigned_core[task]][succ]
                     queue.append(succ)
                 else:
                     self.rank[task] += self.w_avg[succ]

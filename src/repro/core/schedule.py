@@ -79,14 +79,27 @@ class Schedule:
         c.core_slots = [list(slots) for slots in self.core_slots]
         return c
 
+    def extend_sorted(self, items) -> None:
+        """Bulk place: append every ``(sid, core, start, end)`` and sort
+        each touched core's slot list once, instead of one
+        ``bisect.insort`` per placement (the admission-commit path)."""
+        touched = set()
+        for sid, core, start, end in items:
+            assert sid not in self.placements, f"subtask {sid} placed twice"
+            self.placements[sid] = Placement(sid, core, start, end)
+            self.core_slots[core].append((start, end, sid))
+            touched.add(core)
+        for core in touched:
+            self.core_slots[core].sort()
+
     def merge_from(self, other: "Schedule") -> None:
         """Adopt every placement of ``other`` not already present (used to
         commit a tentatively scheduled app into the cluster timeline)."""
         if other.n_cores != self.n_cores:
             raise ValueError("core-count mismatch")
-        for sid, p in other.placements.items():
-            if sid not in self.placements:
-                self.place(sid, p.core, p.start, p.end)
+        self.extend_sorted((sid, p.core, p.start, p.end)
+                           for sid, p in other.placements.items()
+                           if sid not in self.placements)
 
     # ---- queries --------------------------------------------------------
     def makespan(self) -> float:
@@ -139,8 +152,9 @@ def validate(schedule: Schedule, graph: AppGraph, machine: MachineModel,
             raise ScheduleError(
                 f"subtask {sid}: duration {p.end - p.start} != {dur}")
 
+    all_slots = schedule.core_slots    # one view build (Timeline property)
     for core in range(machine.n_cores):
-        slots = schedule.core_slots[core]
+        slots = all_slots[core]
         for (s0, e0, a), (s1, e1, b) in zip(slots, slots[1:]):
             if e0 > s1 + 1e-9:
                 raise ScheduleError(f"overlap on core {core}: {a} and {b}")

@@ -1,0 +1,219 @@
+"""Array-backed timeline: the scheduling engine's hot data structure.
+
+``Schedule`` keeps one list of ``(start, end, sid)`` tuples per core and
+re-scans it linearly on every gap query; tentative admissions snapshot
+the whole thing with ``copy()``. ``Timeline`` replaces both costs:
+
+* **structure-of-arrays** storage — per-core parallel lists of starts,
+  ends and sids kept sorted by start, with a cached per-core
+  ``core_available`` so the common "append at the end" placement is
+  O(log slots) instead of O(slots);
+* **binary-search gap lookup** — ``earliest_slot`` bisects to the first
+  interval that can matter for ``ready`` and scans only the gaps after
+  it, so the placement inner loop drops from O(slots) to O(log slots)
+  when the request lands at/after the frontier (the overwhelmingly
+  common case for online admissions);
+* a **transaction journal** — ``begin()`` / ``commit()`` / ``rollback()``
+  record each placement made inside the transaction, so a tentative
+  admission or a ``predict()`` what-if rewinds in O(ops made) instead of
+  deep-copying the entire cluster timeline up front.
+
+The interface is a superset of :class:`~repro.core.schedule.Schedule`
+(``place``, ``earliest_slot``, ``core_available``, ``gaps``, ``copy``,
+``merge_from``, ``extend_sorted``, the query helpers, and a lazily built
+``core_slots`` view), so the validator, the simulator and the seed
+``AMTHA`` all run on it unchanged.
+
+Invariant: intervals on one core never overlap (everything placed here
+comes out of a gap search), which is what makes ends monotone per core
+and the bisect shortcut exact.
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_right
+
+from .schedule import Placement, Schedule
+
+
+class Timeline:
+    """Sorted per-core interval arrays + journaled mutation."""
+
+    __slots__ = ("n_cores", "placements", "_starts", "_ends", "_sids",
+                 "_avail", "_journal")
+
+    def __init__(self, n_cores: int):
+        self.n_cores = n_cores
+        self.placements: dict[int, Placement] = {}
+        self._starts: list[list[float]] = [[] for _ in range(n_cores)]
+        self._ends: list[list[float]] = [[] for _ in range(n_cores)]
+        self._sids: list[list[int]] = [[] for _ in range(n_cores)]
+        self._avail: list[float] = [0.0] * n_cores
+        # stack of op lists; each op = (sid, core, index, prev_avail)
+        self._journal: list[list[tuple[int, int, int, float]]] = []
+
+    # ---- mutation ------------------------------------------------------
+    def place(self, sid: int, core: int, start: float, end: float) -> None:
+        assert sid not in self.placements, f"subtask {sid} placed twice"
+        starts = self._starts[core]
+        idx = bisect_right(starts, start)
+        starts.insert(idx, start)
+        self._ends[core].insert(idx, end)
+        self._sids[core].insert(idx, sid)
+        self.placements[sid] = Placement(sid, core, start, end)
+        prev = self._avail[core]
+        if end > prev:
+            self._avail[core] = end
+        if self._journal:
+            self._journal[-1].append((sid, core, idx, prev))
+
+    def extend_sorted(self, items) -> None:
+        """Bulk place: append every ``(sid, core, start, end)`` and sort
+        each touched core once, instead of one sorted-insert per
+        placement. Not allowed inside a transaction (the re-sort would
+        invalidate journaled indices)."""
+        assert not self._journal, "bulk place inside a transaction"
+        touched = set()
+        for sid, core, start, end in items:
+            assert sid not in self.placements, f"subtask {sid} placed twice"
+            self.placements[sid] = Placement(sid, core, start, end)
+            self._starts[core].append(start)
+            self._ends[core].append(end)
+            self._sids[core].append(sid)
+            touched.add(core)
+        for c in touched:
+            rows = sorted(zip(self._starts[c], self._ends[c], self._sids[c]))
+            self._starts[c] = [r[0] for r in rows]
+            self._ends[c] = [r[1] for r in rows]
+            self._sids[c] = [r[2] for r in rows]
+            if rows:
+                self._avail[c] = max(self._avail[c], rows[-1][1])
+
+    def merge_from(self, other) -> None:
+        """Adopt every placement of ``other`` not already present (one
+        bulk sort per touched core — the batched commit path)."""
+        if other.n_cores != self.n_cores:
+            raise ValueError("core-count mismatch")
+        self.extend_sorted(
+            (sid, p.core, p.start, p.end)
+            for sid, p in other.placements.items()
+            if sid not in self.placements)
+
+    # ---- transactions --------------------------------------------------
+    def begin(self) -> None:
+        """Open a transaction: every ``place`` until ``commit`` or
+        ``rollback`` is journaled. Transactions nest; an inner commit
+        folds its ops into the enclosing journal."""
+        self._journal.append([])
+
+    def commit(self) -> None:
+        ops = self._journal.pop()
+        if self._journal:
+            self._journal[-1].extend(ops)
+
+    def rollback(self) -> None:
+        """Undo the innermost transaction in O(ops made). Ops are undone
+        LIFO, so each journaled insertion index is exact at undo time."""
+        for sid, core, idx, prev_avail in reversed(self._journal.pop()):
+            del self._starts[core][idx]
+            del self._ends[core][idx]
+            del self._sids[core][idx]
+            del self.placements[sid]
+            self._avail[core] = prev_avail
+
+    @property
+    def in_transaction(self) -> bool:
+        return bool(self._journal)
+
+    # ---- gap search ----------------------------------------------------
+    def earliest_slot(self, core: int, ready: float, duration: float) -> float:
+        """Earliest start >= ready on ``core`` with ``duration`` free.
+
+        Bisects to the last interval starting at/before ``ready`` (its
+        end bounds every earlier end because intervals don't overlap),
+        then scans only the gaps from there — O(log slots) when the
+        request lands at or after the frontier."""
+        starts = self._starts[core]
+        ends = self._ends[core]
+        i = bisect_right(starts, ready)
+        prev = ends[i - 1] if i else 0.0
+        n = len(starts)
+        while i < n:
+            gap_start = prev if prev > ready else ready
+            if gap_start + duration <= starts[i]:
+                return gap_start
+            prev = ends[i]
+            i += 1
+        return prev if prev > ready else ready
+
+    def core_available(self, core: int) -> float:
+        return self._avail[core]
+
+    def gaps(self, core: int, horizon: float = float("inf"),
+             after: float = 0.0) -> list[tuple[float, float]]:
+        """Free intervals on ``core`` within [after, horizon), last one
+        open-ended to ``horizon`` (same contract as ``Schedule.gaps``)."""
+        out: list[tuple[float, float]] = []
+        prev_end = after
+        for s, e in zip(self._starts[core], self._ends[core]):
+            if s > prev_end + 1e-15:
+                out.append((prev_end, min(s, horizon)))
+            prev_end = max(prev_end, e)
+        if prev_end < horizon:
+            out.append((prev_end, horizon))
+        return [(a, b) for a, b in out if b > a + 1e-15]
+
+    # ---- copies / conversions -----------------------------------------
+    def copy(self) -> "Timeline":
+        c = Timeline(self.n_cores)
+        c.placements = dict(self.placements)
+        c._starts = [list(x) for x in self._starts]
+        c._ends = [list(x) for x in self._ends]
+        c._sids = [list(x) for x in self._sids]
+        c._avail = list(self._avail)
+        return c
+
+    @classmethod
+    def from_schedule(cls, schedule: Schedule) -> "Timeline":
+        t = cls(schedule.n_cores)
+        for core, slots in enumerate(schedule.core_slots):
+            t._starts[core] = [s for s, _, _ in slots]
+            t._ends[core] = [e for _, e, _ in slots]
+            t._sids[core] = [sid for _, _, sid in slots]
+            if slots:
+                t._avail[core] = max(e for _, e, _ in slots)
+        t.placements = dict(schedule.placements)
+        return t
+
+    def to_schedule(self) -> Schedule:
+        s = Schedule(self.n_cores)
+        s.placements = dict(self.placements)
+        s.core_slots = [list(zip(self._starts[c], self._ends[c],
+                                 self._sids[c]))
+                        for c in range(self.n_cores)]
+        return s
+
+    # ---- queries (Schedule-compatible) --------------------------------
+    @property
+    def core_slots(self) -> list[list[tuple[float, float, int]]]:
+        """Schedule-shaped view, built on demand (validator/metrics
+        path, not the hot path)."""
+        return [list(zip(self._starts[c], self._ends[c], self._sids[c]))
+                for c in range(self.n_cores)]
+
+    def makespan(self) -> float:
+        if not self.placements:
+            return 0.0
+        return max(self._avail)
+
+    def core_of(self, sid: int) -> int:
+        return self.placements[sid].core
+
+    def end_of(self, sid: int) -> float:
+        return self.placements[sid].end
+
+    def order_on_core(self, core: int) -> list[int]:
+        return list(self._sids[core])
+
+    def assignment(self) -> dict[int, int]:
+        return {sid: p.core for sid, p in self.placements.items()}

@@ -10,6 +10,7 @@ import jax
 from . import flash_attention as _fa
 from . import flash_decode as _fd
 from . import rmsnorm as _rn
+from . import sched_score as _ss
 from . import ssd_scan as _ssd
 
 
@@ -32,6 +33,13 @@ def rmsnorm(x, w, *, eps=1e-6, zero_centered=True):
 
 def ssd_scan(x, dt, A, B, C, chunk=256):
     return _ssd.ssd_scan(x, dt, A, B, C, chunk, interpret=not _on_tpu())
+
+
+def sched_score(drain, frontiers, release, *, apps_block=128,
+                cores_block=128):
+    return _ss.sched_score(drain, frontiers, release,
+                           apps_block=apps_block, cores_block=cores_block,
+                           interpret=not _on_tpu())
 
 
 def flash_decode(q, k_cache, v_cache, pos, *, scale=None, softcap=None,

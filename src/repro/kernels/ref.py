@@ -1,5 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets of the
-per-kernel shape/dtype sweeps in tests/test_kernels.py)."""
+per-kernel shape/dtype sweeps in tests/test_kernels.py). The scheduler
+scoring oracle is pure NumPy and lives in the JAX-free ``sched_ref``
+module so the admission policies can use it without touching JAX; it is
+re-exported here to keep one oracle registry."""
 
 from __future__ import annotations
 
@@ -28,6 +31,9 @@ def ssd_scan_ref(x, dt, A, B, C, chunk=256):
 
 
 ssd_sequential_ref = ssd_sequential
+
+
+from .sched_ref import sched_score_np as sched_score_ref  # noqa: E402
 
 
 def decode_attention_ref(q, k_cache, v_cache, pos, *, scale=None,

@@ -1,0 +1,28 @@
+"""NumPy-only scheduler-scoring helpers — the JAX-free leaf that both
+the Pallas kernel (``sched_score.py``), the oracle registry (``ref.py``)
+and the admission policies import, so ``BatchedPolicy``'s kernel scorer
+can degrade gracefully when JAX is absent."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sched_score_np(drain, frontiers, release) -> np.ndarray:
+    """Oracle for ``sched_score``: elementwise
+    ``max(frontier[j], release[i]) + drain[i, j]`` over the
+    (apps × cores) candidate matrix."""
+    drain = np.asarray(drain, np.float32)
+    f = np.asarray(frontiers, np.float32)[None, :]
+    r = np.asarray(release, np.float32)[:, None]
+    return np.maximum(f, r) + drain
+
+
+def drain_matrix(graphs, machine) -> np.ndarray:
+    """(apps × cores) serial drain times — the scoring input.
+
+    Built per app as a (n_types,) work vector gathered over
+    ``machine.core_types``."""
+    per_type = np.array([[sum(st.times[t] for st in g.subtasks)
+                          for t in range(g.n_types)] for g in graphs])
+    return per_type[:, np.asarray(machine.core_types)]

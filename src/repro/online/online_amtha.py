@@ -2,19 +2,33 @@
 
 The offline algorithm (Fig. 3 of the paper) is unchanged — rank
 selection, LU/LNU-aware processor choice, cascade gap placement. What
-changes is the machine it sees: instead of an empty ``Schedule`` it
-warm-starts on the cluster's occupied timeline, so the §3.4 gap search
+changes is the machine it sees: instead of an empty timeline it
+warm-starts on the cluster's occupied one, so the §3.4 gap search
 ("a free interval between two subtasks already placed in p, or an
 interval after them") now packs the new app into holes left by earlier
 apps, and no subtask may start before the app's arrival instant.
 
-On an idle cluster at t=0 this degenerates to the paper's offline run
-exactly — a property the tests pin down (warm == cold).
+Two execution paths share the admission semantics:
+
+* **engine** (default) — the array-backed :class:`ArrayAMTHA` runs
+  directly on the live :class:`~repro.core.timeline.Timeline` inside a
+  transaction: ``predict()`` is ``begin → run → rollback`` (O(ops) to
+  rewind) and ``admit()`` is ``begin → run → commit``. No timeline copy
+  is ever taken, which is what makes what-if cost independent of how
+  much history the cluster has accumulated.
+* **seed** (``use_engine=False``) — the original copy-the-timeline /
+  merge-on-success path, kept as the equivalence oracle and the
+  baseline the what-if benchmark measures against.
+
+Both paths produce placement-identical timelines. On an idle cluster at
+t=0 this degenerates to the paper's offline run exactly — a property
+the tests pin down (warm == cold).
 """
 
 from __future__ import annotations
 
 from ..core.amtha import AMTHA
+from ..core.engine import ArrayAMTHA
 from ..core.machine import MachineModel
 from .arrivals import AppArrival
 from .state import AdmittedApp, ClusterState
@@ -23,24 +37,37 @@ from .state import AdmittedApp, ClusterState
 class OnlineAMTHA:
     """Admission engine over a :class:`ClusterState`."""
 
-    def __init__(self, machine: MachineModel):
+    def __init__(self, machine: MachineModel, use_engine: bool = True):
         self.machine = machine
         self.state = ClusterState(machine)
+        self.use_engine = use_engine
 
     # ------------------------------------------------------------------
     def predict(self, arrival: AppArrival, at: float | None = None) -> float:
         """Predicted finish if ``arrival`` were admitted now — evaluated
-        on a throwaway copy of the timeline, nothing committed. This is
-        the cheap what-if the policies use to order/filter a queue."""
+        inside a transaction on the live timeline (engine path) or on a
+        throwaway copy (seed path), nothing committed. This is the cheap
+        what-if the policies use to order/filter a queue."""
         t = arrival.t_arrival if at is None else at
-        trial = self.state.schedule.copy()
         off = self.state.peek_offset()      # peek, do not reserve
         # same floor admit() would use: never before the cluster clock
         release = max(self.state.now, t, arrival.t_arrival)
+        n = arrival.graph.n_subtasks
+        if self.use_engine:
+            tl = self.state.schedule
+            # constructor validates before the transaction opens
+            eng = ArrayAMTHA(arrival.graph, self.machine, warm_start=tl,
+                             release_time=release, sid_offset=off)
+            tl.begin()
+            try:
+                eng.run()
+                return max(tl.placements[off + s].end for s in range(n))
+            finally:
+                tl.rollback()
+        trial = self.state.schedule.copy()
         AMTHA(arrival.graph, self.machine, warm_start=trial,
               release_time=release, sid_offset=off).run()
-        return max(trial.placements[off + s].end
-                   for s in range(arrival.graph.n_subtasks))
+        return max(trial.placements[off + s].end for s in range(n))
 
     def admit(self, arrival: AppArrival, at: float | None = None) -> AdmittedApp:
         """Schedule ``arrival`` into the live timeline and commit it.
@@ -48,29 +75,40 @@ class OnlineAMTHA:
         ``at`` — the admission instant (defaults to the arrival time;
         batched policies admit later than the app arrived). The release
         floor is ``max(at, t_arrival)``: a queued app still cannot start
-        before it was admitted.
+        before it was admitted. Transactional either way: a failed
+        admission (type mismatch, mid-run assert) leaves the cluster
+        state untouched.
         """
         t = arrival.t_arrival if at is None else at
         self.state.advance_to(t)
-        # transactional: schedule onto a copy, commit only on success, so
-        # a failed admission (type mismatch, mid-run assert) leaves the
-        # cluster state untouched
         off = self.state.peek_offset()
-        trial = self.state.schedule.copy()
-        AMTHA(arrival.graph, self.machine,
-              warm_start=trial,
-              release_time=max(t, arrival.t_arrival),
-              sid_offset=off).run()
+        release = max(t, arrival.t_arrival)
+        if self.use_engine:
+            tl = self.state.schedule
+            eng = ArrayAMTHA(arrival.graph, self.machine, warm_start=tl,
+                             release_time=release, sid_offset=off)
+            tl.begin()
+            try:
+                eng.run()
+            except BaseException:
+                tl.rollback()
+                raise
+            tl.commit()
+        else:
+            trial = self.state.schedule.copy()
+            AMTHA(arrival.graph, self.machine, warm_start=trial,
+                  release_time=release, sid_offset=off).run()
+            self.state.commit_trial(trial)
         reserved = self.state.allot_offset(arrival.graph)
         assert reserved == off
-        self.state.schedule.merge_from(trial)
         return self.state.commit(arrival, off, t_admit=t)
 
 
 def replay_fifo(machine: MachineModel, workload: list[AppArrival],
-                validate_each: bool = False) -> ClusterState:
+                validate_each: bool = False,
+                use_engine: bool = True) -> ClusterState:
     """Convenience: admit a whole workload first-come-first-served."""
-    eng = OnlineAMTHA(machine)
+    eng = OnlineAMTHA(machine, use_engine=use_engine)
     for arr in sorted(workload, key=lambda a: a.t_arrival):
         eng.admit(arr)
         if validate_each:

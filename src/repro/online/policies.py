@@ -12,12 +12,22 @@ handed to :class:`~repro.online.online_amtha.OnlineAMTHA`:
   applications): heaviest work is placed while the timeline still has
   big holes.
 * **Batched** — re-map every ``k`` arrivals using the *concurrent
-  evaluation path*: every queued app is scheduled against the same
-  frozen snapshot of the timeline (the evaluations are independent, so
-  they could run on worker threads/cores — here sequentially over
-  ``Schedule.copy()`` snapshots), then commits happen
+  evaluation path*: every queued app is scored against the same frozen
+  snapshot of the timeline, then commits happen
   shortest-predicted-response-first (SJF), which minimises mean response
-  within the batch.
+  within the batch. Two scorers share that contract:
+
+  - ``scorer="exact"`` (default) — one transactional AMTHA what-if per
+    app on the live timeline (``begin``/``rollback``, no copies); the
+    evaluations are independent, so they could run on worker
+    threads/cores;
+  - ``scorer="kernel"`` — the whole ``(apps × cores)`` candidate matrix
+    is scored in **one** ``sched_score`` kernel call (drain-on-one-core
+    completion estimates against the per-core frontiers) — a screening
+    pass whose cost does not grow with timeline length at all. Ordering
+    may differ from the exact scorer where drain estimates invert true
+    what-if finishes; every admission itself still runs the exact
+    engine.
 
 All policies share one invariant: a queued app's release floor is its
 admission instant, never earlier, so the produced timeline is causal.
@@ -40,8 +50,9 @@ def app_rank(arrival: AppArrival, machine: MachineModel) -> float:
 class Policy:
     name = "abstract"
 
-    def __init__(self, validate_each: bool = False):
+    def __init__(self, validate_each: bool = False, use_engine: bool = True):
         self.validate_each = validate_each
+        self.use_engine = use_engine        # False -> seed copy/merge oracle
 
     # -- subclass hooks --------------------------------------------------
     def batch_size(self) -> int:
@@ -54,7 +65,7 @@ class Policy:
     # -- driver ----------------------------------------------------------
     def run(self, machine: MachineModel,
             workload: list[AppArrival]) -> ClusterState:
-        eng = OnlineAMTHA(machine)
+        eng = OnlineAMTHA(machine, use_engine=self.use_engine)
         pending: list[AppArrival] = []
         stream = sorted(workload, key=lambda a: a.t_arrival)
         for i, arr in enumerate(stream):
@@ -79,8 +90,9 @@ class RankPriorityPolicy(Policy):
 
     name = "rank"
 
-    def __init__(self, k: int = 4, validate_each: bool = False):
-        super().__init__(validate_each)
+    def __init__(self, k: int = 4, validate_each: bool = False,
+                 use_engine: bool = True):
+        super().__init__(validate_each, use_engine)
         self.k = k
 
     def batch_size(self) -> int:
@@ -96,29 +108,60 @@ class BatchedPolicy(Policy):
 
     name = "batched"
 
-    def __init__(self, k: int = 4, validate_each: bool = False):
-        super().__init__(validate_each)
+    def __init__(self, k: int = 4, validate_each: bool = False,
+                 scorer: str = "exact", use_engine: bool = True):
+        super().__init__(validate_each, use_engine)
+        if scorer not in ("exact", "kernel"):
+            raise ValueError(f"unknown scorer {scorer!r}")
         self.k = k
+        self.scorer = scorer
 
     def batch_size(self) -> int:
         return self.k
 
     def order_batch(self, batch, eng, now):
-        # independent what-ifs against the same snapshot — the batched
-        # evaluation path (each predict() copies the timeline, so the
-        # evaluations do not see each other)
-        scored = [(eng.predict(a, at=now) - now, a.app_id, a) for a in batch]
+        if self.scorer == "kernel":
+            scores = self.kernel_scores(batch, eng, now)
+            scored = [(s, a.app_id, a) for s, a in zip(scores, batch)]
+        else:
+            # independent transactional what-ifs against the same
+            # snapshot (each predict() journals and rewinds the live
+            # timeline, so the evaluations do not see each other)
+            scored = [(eng.predict(a, at=now) - now, a.app_id, a)
+                      for a in batch]
         return [a for _, _, a in sorted(scored, key=lambda s: s[:2])]
+
+    @staticmethod
+    def kernel_scores(batch, eng, now) -> list[float]:
+        """One batched ``sched_score`` call over the (apps × cores)
+        candidate matrix; per-app score = best core's drain estimate,
+        relative to ``now`` like the exact scorer. Degrades to the
+        NumPy oracle when JAX is unavailable (``sched_ref`` is the
+        JAX-free leaf both paths share)."""
+        import numpy as np
+
+        from ..kernels.sched_ref import drain_matrix, sched_score_np
+        drain = drain_matrix([a.graph for a in batch], eng.machine)
+        frontiers = eng.state.frontiers()
+        release = [max(now, a.t_arrival) for a in batch]
+        try:
+            from ..kernels.ops import sched_score
+            matrix = np.asarray(sched_score(drain, frontiers, release))
+        except ImportError:                  # pragma: no cover - no JAX
+            matrix = sched_score_np(drain, frontiers, release)
+        return [float(v) - now for v in matrix.min(axis=1)]
 
 
 POLICIES = {p.name: p for p in (FIFOPolicy, RankPriorityPolicy, BatchedPolicy)}
 
 
-def make_policy(name: str, k: int = 4, validate_each: bool = False) -> Policy:
+def make_policy(name: str, k: int = 4, validate_each: bool = False,
+                scorer: str = "exact", use_engine: bool = True) -> Policy:
     if name == "fifo":
-        return FIFOPolicy(validate_each)
+        return FIFOPolicy(validate_each, use_engine)
     if name == "rank":
-        return RankPriorityPolicy(k, validate_each)
+        return RankPriorityPolicy(k, validate_each, use_engine)
     if name == "batched":
-        return BatchedPolicy(k, validate_each)
+        return BatchedPolicy(k, validate_each, scorer=scorer,
+                             use_engine=use_engine)
     raise ValueError(f"unknown policy {name!r} (have {sorted(POLICIES)})")

@@ -20,7 +20,8 @@ from dataclasses import dataclass
 
 from ..core.machine import MachineModel
 from ..core.mpaha import AppGraph, merge_graphs
-from ..core.schedule import Schedule, validate
+from ..core.schedule import validate
+from ..core.timeline import Timeline
 from .arrivals import AppArrival
 
 
@@ -55,7 +56,8 @@ class ClusterState:
 
     def __init__(self, machine: MachineModel):
         self.machine = machine
-        self.schedule = Schedule(machine.n_cores)
+        # array-backed: O(log slots) gap search and journaled what-ifs
+        self.schedule = Timeline(machine.n_cores)
         self.apps: list[AdmittedApp] = []
         self.now = 0.0
         self._next_sid = 0
@@ -98,6 +100,12 @@ class ClusterState:
         off = self._next_sid
         self._next_sid += graph.n_subtasks
         return off
+
+    def commit_trial(self, trial) -> None:
+        """Adopt a tentatively scheduled timeline's new placements in
+        bulk (one append + sort per touched core via ``extend_sorted``,
+        not per-placement sorted inserts)."""
+        self.schedule.merge_from(trial)
 
     def commit(self, arrival: AppArrival, sid_offset: int,
                t_admit: float) -> AdmittedApp:

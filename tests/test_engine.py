@@ -1,0 +1,236 @@
+"""Engine equivalence: the array-backed ArrayAMTHA must reproduce the
+seed AMTHA's schedules bit-for-bit — same (sid -> core, start, end) map —
+across machines, graph shapes, warm starts, release times and sid
+offsets; plus the batched sched_score kernel against its NumPy oracle."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AppGraph, SynthParams, Timeline, amtha_schedule,
+                        cluster_of_multicores, dell_poweredge_1950,
+                        engine_schedule, generate_app, heterogeneous_cluster,
+                        hp_bl260c, validate)
+from repro.core.machine import CommLevel, MachineModel
+from repro.online import ArrivalParams, OnlineAMTHA, generate_workload, make_policy
+
+
+def pmap(s):
+    return {sid: (p.core, p.start, p.end) for sid, p in s.placements.items()}
+
+
+MACHINES = [dell_poweredge_1950(), hp_bl260c(n_blades=2),
+            heterogeneous_cluster(), cluster_of_multicores(n_blades=2)]
+
+
+# ---------------------------------------------------------------------------
+# offline equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("machine", MACHINES, ids=lambda m: m.name)
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_engine_matches_seed_cold(machine, seed):
+    g = generate_app(SynthParams(n_types=machine.n_types), seed=seed)
+    a = amtha_schedule(g, machine)
+    b = engine_schedule(g, machine)
+    assert pmap(a) == pmap(b)
+    validate(b.to_schedule(), g, machine)
+
+
+def test_engine_matches_seed_on_handcrafted_graphs():
+    m = MachineModel("m2", [0, 0], [(0,), (1,)], [CommLevel("bus", 0.0, 1e6)])
+    g = AppGraph(n_types=1)
+    a = g.add_task(0, [(1.0,), (1.0,)])
+    b = g.add_task(1, [(5.0,), (1.0,)])
+    g.add_edge(a[1], b[1], 100.0)           # LNU / blocked-suffix case
+    g.add_edge(b[0], a[0], 100.0)
+    g.finalize()
+    assert pmap(amtha_schedule(g, m)) == pmap(engine_schedule(g, m))
+
+
+@pytest.mark.parametrize("seed", [10, 11])
+def test_engine_matches_seed_warm_with_offsets(seed):
+    m = dell_poweredge_1950()
+    g1 = generate_app(SynthParams(), seed=seed)
+    g2 = generate_app(SynthParams(), seed=seed + 100)
+    s = amtha_schedule(g1, m)
+    t = engine_schedule(g1, m)
+    s2 = amtha_schedule(g2, m, warm_start=s, release_time=37.5,
+                        sid_offset=g1.n_subtasks)
+    t2 = engine_schedule(g2, m, warm_start=t, release_time=37.5,
+                         sid_offset=g1.n_subtasks)
+    assert pmap(s2) == pmap(t2)
+
+
+def test_engine_schedule_warm_start_is_mutated_in_place_like_seed():
+    m = dell_poweredge_1950()
+    g1 = generate_app(SynthParams(), seed=1)
+    g2 = generate_app(SynthParams(), seed=2)
+    s = amtha_schedule(g1, m)
+    t = engine_schedule(g2, m, warm_start=s, release_time=10.0,
+                        sid_offset=g1.n_subtasks)
+    assert isinstance(t, Timeline)
+    # the seed contract: a Schedule warm start receives the placements
+    assert len(s.placements) == g1.n_subtasks + g2.n_subtasks
+    assert pmap(s) == pmap(t)
+    assert s.core_slots == t.core_slots
+
+
+def test_engine_rejects_type_mismatch_like_seed():
+    m = dell_poweredge_1950()
+    g = generate_app(SynthParams(n_types=2), seed=0)
+    with pytest.raises(ValueError):
+        engine_schedule(g, m)
+
+
+# ---------------------------------------------------------------------------
+# online equivalence (transactional what-ifs vs copy/merge)
+# ---------------------------------------------------------------------------
+
+def test_online_engine_matches_seed_path_under_every_policy():
+    m = dell_poweredge_1950()
+    wl = generate_workload(ArrivalParams(rate=0.05), 6, seed=13)
+    for name in ("fifo", "rank", "batched"):
+        ref = make_policy(name, k=3, use_engine=False).run(m, wl)
+        new = make_policy(name, k=3, use_engine=True).run(m, wl)
+        assert pmap(ref.schedule) == pmap(new.schedule), name
+        new.validate()
+
+
+def test_predict_rolls_back_exactly():
+    m = dell_poweredge_1950()
+    wl = generate_workload(ArrivalParams(rate=0.05), 3, seed=31)
+    eng = OnlineAMTHA(m)
+    eng.admit(wl[0])
+    before_slots = eng.state.schedule.core_slots
+    before_placements = dict(eng.state.schedule.placements)
+    predicted = eng.predict(wl[1])
+    assert eng.state.schedule.core_slots == before_slots
+    assert eng.state.schedule.placements == before_placements
+    app = eng.admit(wl[1])
+    assert app.t_est_finish == pytest.approx(predicted)
+
+
+def test_kernel_scorer_policy_produces_valid_timeline():
+    m = dell_poweredge_1950()
+    wl = generate_workload(ArrivalParams(rate=0.05), 6, seed=23)
+    state = make_policy("batched", k=3, validate_each=True,
+                        scorer="kernel").run(m, wl)
+    assert state.n_admitted == len(wl)
+    state.validate()
+
+
+# ---------------------------------------------------------------------------
+# randomized equivalence (always on; the hypothesis sweep widens it)
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_seed_randomized():
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        n_types = int(rng.integers(1, 3))
+        machine = heterogeneous_cluster(n_fast=int(rng.integers(1, 5)),
+                                        n_slow=int(rng.integers(1, 5))) \
+            if n_types == 2 else dell_poweredge_1950()
+        params = SynthParams(
+            n_tasks=(2, int(rng.integers(3, 15))),
+            subtasks_per_task=(1, int(rng.integers(2, 7))),
+            comm_probability=(0.05, float(rng.uniform(0.1, 0.9))),
+            n_types=machine.n_types)
+        release = float(rng.uniform(0.0, 50.0))
+        off = int(rng.integers(0, 3)) * 1000
+        g1 = generate_app(params, seed=int(rng.integers(0, 2**31 - 1)))
+        g2 = generate_app(params, seed=int(rng.integers(0, 2**31 - 1)))
+        s = amtha_schedule(g1, machine, release_time=release, sid_offset=off)
+        t = engine_schedule(g1, machine, release_time=release, sid_offset=off)
+        assert pmap(s) == pmap(t), trial
+        off2 = off + g1.n_subtasks
+        s2 = amtha_schedule(g2, machine, warm_start=s,
+                            release_time=release + 5.0, sid_offset=off2)
+        t2 = engine_schedule(g2, machine, warm_start=t,
+                             release_time=release + 5.0, sid_offset=off2)
+        assert pmap(s2) == pmap(t2), trial
+
+
+# ---------------------------------------------------------------------------
+# sched_score kernel vs NumPy oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1, 1), (3, 8), (17, 64), (130, 130)])
+def test_sched_score_matches_ref(shape):
+    from repro.kernels.ref import sched_score_ref
+    from repro.kernels.sched_score import sched_score
+    a, c = shape
+    rng = np.random.default_rng(a * 1000 + c)
+    drain = rng.uniform(0.0, 100.0, (a, c))
+    frontiers = rng.uniform(0.0, 50.0, c)
+    release = rng.uniform(0.0, 50.0, a)
+    got = np.asarray(sched_score(drain, frontiers, release, interpret=True))
+    np.testing.assert_allclose(got, sched_score_ref(drain, frontiers, release),
+                               rtol=1e-6)
+
+
+def test_drain_matrix_gathers_per_core_types():
+    from repro.kernels.sched_score import drain_matrix
+    m = heterogeneous_cluster(n_fast=2, n_slow=2)
+    g = generate_app(SynthParams(n_types=2), seed=0)
+    d = drain_matrix([g], m)
+    assert d.shape == (1, m.n_cores)
+    want_fast = sum(st.times[0] for st in g.subtasks)
+    want_slow = sum(st.times[1] for st in g.subtasks)
+    assert d[0, 0] == pytest.approx(want_fast)
+    assert d[0, -1] == pytest.approx(want_slow)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                          # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def machines(draw):
+        n_types = draw(st.integers(1, 3))
+        cores, locs = [], []
+        for g in range(draw(st.integers(1, 3))):
+            for c in range(draw(st.integers(1, 4))):
+                locs.append((g, c))
+                cores.append(draw(st.integers(0, n_types - 1)))
+        for t in range(n_types):
+            if t not in cores:
+                cores[t % len(cores)] = t
+        levels = [CommLevel("net", 1e-5, draw(st.floats(1e6, 1e9))),
+                  CommLevel("ram", 1e-7, draw(st.floats(1e9, 1e11)))]
+        return MachineModel("hyp", cores, locs, levels, n_types=n_types)
+
+    @st.composite
+    def scenarios(draw):
+        m = draw(machines())
+        params = SynthParams(
+            n_tasks=(2, draw(st.integers(3, 12))),
+            subtasks_per_task=(1, draw(st.integers(2, 6))),
+            comm_volume=(10.0, draw(st.floats(100.0, 1e6))),
+            comm_probability=(0.05, draw(st.floats(0.1, 0.9))),
+            n_types=m.n_types)
+        g1 = generate_app(params, seed=draw(st.integers(0, 2**31 - 1)))
+        g2 = generate_app(params, seed=draw(st.integers(0, 2**31 - 1)))
+        release = draw(st.floats(0.0, 100.0))
+        off = draw(st.integers(0, 2)) * 500
+        return m, g1, g2, release, off
+
+    @given(scenarios())
+    @settings(max_examples=30, deadline=None)
+    def test_engine_equivalence_property(scenario):
+        m, g1, g2, release, off = scenario
+        s = amtha_schedule(g1, m, release_time=release, sid_offset=off)
+        t = engine_schedule(g1, m, release_time=release, sid_offset=off)
+        assert pmap(s) == pmap(t)
+        off2 = off + g1.n_subtasks
+        s2 = amtha_schedule(g2, m, warm_start=s, release_time=release + 1.0,
+                            sid_offset=off2)
+        t2 = engine_schedule(g2, m, warm_start=t, release_time=release + 1.0,
+                             sid_offset=off2)
+        assert pmap(s2) == pmap(t2)

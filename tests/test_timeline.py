@@ -1,0 +1,148 @@
+"""Unit tests for the array-backed Timeline: gap-search parity with the
+seed Schedule, the transaction journal, and the bulk-place API."""
+
+import random
+
+import pytest
+
+from repro.core import Schedule, Timeline
+
+
+def random_busy_pair(seed, n_cores=3, n_intervals=40):
+    """The same legal (non-overlapping) interval set in both structures."""
+    rng = random.Random(seed)
+    sch, tl = Schedule(n_cores), Timeline(n_cores)
+    sid = 0
+    for core in range(n_cores):
+        t = 0.0
+        for _ in range(n_intervals):
+            t += rng.uniform(0.0, 3.0)              # gap
+            dur = rng.uniform(0.1, 2.0)
+            sch.place(sid, core, t, t + dur)
+            tl.place(sid, core, t, t + dur)
+            t += dur
+            sid += 1
+    return sch, tl
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_earliest_slot_matches_schedule(seed):
+    sch, tl = random_busy_pair(seed)
+    rng = random.Random(seed + 1000)
+    for _ in range(200):
+        core = rng.randrange(sch.n_cores)
+        ready = rng.uniform(0.0, 150.0)
+        dur = rng.uniform(0.01, 5.0)
+        assert tl.earliest_slot(core, ready, dur) == \
+            sch.earliest_slot(core, ready, dur)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_gaps_and_queries_match_schedule(seed):
+    sch, tl = random_busy_pair(seed)
+    for core in range(sch.n_cores):
+        assert tl.gaps(core, horizon=200.0) == sch.gaps(core, horizon=200.0)
+        assert tl.gaps(core, horizon=80.0, after=10.0) == \
+            sch.gaps(core, horizon=80.0, after=10.0)
+        assert tl.core_available(core) == sch.core_available(core)
+        assert tl.order_on_core(core) == sch.order_on_core(core)
+        assert tl.core_slots[core] == sch.core_slots[core]
+    assert tl.makespan() == sch.makespan()
+    assert tl.assignment() == sch.assignment()
+
+
+def test_conversions_roundtrip():
+    sch, tl = random_busy_pair(7)
+    via = Timeline.from_schedule(sch)
+    assert via.core_slots == tl.core_slots
+    assert via.placements == tl.placements
+    back = tl.to_schedule()
+    assert back.core_slots == sch.core_slots
+    assert back.placements == sch.placements
+
+
+def test_transaction_rollback_restores_everything():
+    _, tl = random_busy_pair(3)
+    before_slots = tl.core_slots
+    before_placements = dict(tl.placements)
+    before_avail = [tl.core_available(c) for c in range(tl.n_cores)]
+    tl.begin()
+    tl.place(10_000, 0, 500.0, 501.0)       # past the frontier
+    tl.place(10_001, 1, 0.05, 0.06)         # into an early gap
+    tl.place(10_002, 0, 502.0, 503.0)
+    assert tl.in_transaction
+    tl.rollback()
+    assert not tl.in_transaction
+    assert tl.core_slots == before_slots
+    assert tl.placements == before_placements
+    assert [tl.core_available(c) for c in range(tl.n_cores)] == before_avail
+
+
+def test_transaction_commit_keeps_placements():
+    tl = Timeline(2)
+    tl.begin()
+    tl.place(0, 0, 0.0, 1.0)
+    tl.commit()
+    assert 0 in tl.placements
+    assert tl.core_available(0) == 1.0
+
+
+def test_nested_transactions_fold_into_parent():
+    tl = Timeline(1)
+    tl.begin()
+    tl.place(0, 0, 0.0, 1.0)
+    tl.begin()
+    tl.place(1, 0, 1.0, 2.0)
+    tl.commit()                             # inner commit -> parent journal
+    tl.rollback()                           # outer rollback undoes both
+    assert tl.placements == {}
+    assert tl.core_available(0) == 0.0
+
+
+def test_copy_is_independent_and_journal_free():
+    _, tl = random_busy_pair(9)
+    c = tl.copy()
+    c.place(10_000, 0, 1e6, 1e6 + 1.0)
+    assert 10_000 not in tl.placements
+    assert not c.in_transaction
+
+
+def test_extend_sorted_matches_incremental_place():
+    rng = random.Random(17)
+    items = []
+    sid = 0
+    for core in range(2):
+        t = 0.0
+        for _ in range(25):
+            t += rng.uniform(0.0, 2.0)
+            d = rng.uniform(0.1, 1.0)
+            items.append((sid, core, t, t + d))
+            t += d
+            sid += 1
+    rng.shuffle(items)
+    one_by_one, bulk = Timeline(2), Timeline(2)
+    for it in items:
+        one_by_one.place(*it)
+    bulk.extend_sorted(items)
+    assert bulk.core_slots == one_by_one.core_slots
+    assert bulk.placements == one_by_one.placements
+    assert [bulk.core_available(c) for c in range(2)] == \
+        [one_by_one.core_available(c) for c in range(2)]
+
+
+def test_extend_sorted_refused_inside_transaction():
+    tl = Timeline(1)
+    tl.begin()
+    with pytest.raises(AssertionError):
+        tl.extend_sorted([(0, 0, 0.0, 1.0)])
+    tl.rollback()
+
+
+def test_schedule_extend_sorted_matches_place():
+    items = [(2, 0, 5.0, 6.0), (0, 0, 0.0, 1.0), (1, 1, 2.0, 3.0)]
+    bulk, ref = Schedule(2), Schedule(2)
+    bulk.extend_sorted(items)
+    for it in items:
+        ref.place(*it)
+    assert bulk.core_slots == ref.core_slots
+    assert bulk.placements == ref.placements
