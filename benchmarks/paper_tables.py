@@ -11,42 +11,62 @@ Each function reproduces one published result:
 * ``scaling``      — algorithm runtime vs (tasks × cores), incl. the
   128-core configuration named in §7 future work.
 
-T_exec sources (DESIGN.md §6): the contention-aware discrete-event
-simulator and the threaded wall-clock executor (scaled sleeps).
+Schedulers and simulators are picked from the core registry by name
+(``scheduler="engine"`` is the array engine — placement-identical to
+the seed AMTHA; ``sim="arrays"`` is the lowered event loop —
+bit-for-bit the seed simulator). T_exec sources (DESIGN.md §6): the
+contention-aware discrete-event simulator and the threaded wall-clock
+executor (scaled sleeps). The suite-level validation additionally runs
+through the **batched array simulator** (``simulate_suite``): every
+(app × jitter) scenario in one fixed-shape call — the throughput path
+``benchmarks/sim_bench.py`` records in ``BENCH_sim.json``.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import replace
 
 import numpy as np
 
-from repro.core import (SynthParams, amtha_schedule, dell_poweredge_1950,
-                        etf_schedule, execute_threaded, generate_app,
-                        heft_schedule, hp_bl260c, simulate)
+from repro.core import (SynthParams, dell_poweredge_1950, execute_threaded,
+                        generate_app, get_scheduler, get_simulator,
+                        hp_bl260c, simulate_suite)
 
 
 def _suite(params: SynthParams, n_apps: int, seed: int):
     return [generate_app(params, seed + i) for i in range(n_apps)]
 
 
-def _difs(apps, machine, jitter=0.01, threaded=False, time_scale=1e-3):
+def _difs(apps, machine, jitter=0.01, threaded=False, time_scale=1e-3,
+          scheduler="engine", sim="arrays"):
     # time_scale=1e-3 maps 5-50 s subtasks to 5-50 ms sleeps: long enough
     # that the ~0.1 ms sleep overshoot stays inside the paper's band.
-    sim_difs, thr_difs, est_times = [], [], []
+    schedule_fn = get_scheduler(scheduler)
+    simulate_fn = get_simulator(sim)
+    sim_difs, thr_difs, est_times, schedules = [], [], [], []
     for i, g in enumerate(apps):
         t0 = time.perf_counter()
-        sched = amtha_schedule(g, machine)
+        sched = schedule_fn(g, machine)
         est_times.append(time.perf_counter() - t0)
+        schedules.append(sched)
         t_est = sched.makespan()
-        r = simulate(g, machine, sched, contention=True, jitter=jitter,
-                     seed=i)
+        r = simulate_fn(g, machine, sched, contention=True, jitter=jitter,
+                        seed=i)
         sim_difs.append(r.dif_rel(t_est))
         if threaded:
             e = execute_threaded(g, machine, sched, time_scale=time_scale)
             thr_difs.append(e.dif_rel(t_est))
-    return sim_difs, thr_difs, est_times
+    return sim_difs, thr_difs, est_times, schedules
+
+
+def _batched_difs(apps, machine, schedules, jitter=0.01):
+    """Whole-suite validation in ONE fixed-shape call: the batched array
+    simulator evaluates every app under the analytic (contention-free)
+    semantics + jitter. The contention rows above carry the paper's
+    error story; this row carries the throughput story."""
+    res = simulate_suite(apps, machine, schedules, jitter=jitter,
+                         seeds=range(len(apps)))
+    return list(res.dif_rel())
 
 
 def _report(name, difs, band, extra=""):
@@ -61,38 +81,48 @@ def _report(name, difs, band, extra=""):
             "within": bool((np.abs(difs) < band).all())}
 
 
-def table_8core(n_apps: int = 20, threaded: bool = True):
+def table_8core(n_apps: int = 20, threaded: bool = True,
+                scheduler: str = "engine"):
     m = dell_poweredge_1950()
     apps = _suite(SynthParams(n_tasks=(15, 25)), n_apps, seed=0)
-    sim, thr, est = _difs(apps, m, threaded=threaded)
+    sim, thr, est, schedules = _difs(apps, m, threaded=threaded,
+                                     scheduler=scheduler)
     out = [_report("8core/simulated", sim, band=4.0,
                    extra=f"amtha_ms={1e3 * float(np.mean(est)):.1f}")]
+    out.append(_report("8core/batched", _batched_difs(apps, m, schedules),
+                       band=4.0))
     if thr:
         out.append(_report("8core/threaded", thr, band=4.0))
     return out
 
 
-def table_64core(n_apps: int = 8, threaded: bool = True):
+def table_64core(n_apps: int = 8, threaded: bool = True,
+                 scheduler: str = "engine"):
     m = hp_bl260c()
     apps = _suite(SynthParams(n_tasks=(120, 200)), n_apps, seed=100)
-    sim, thr, est = _difs(apps, m, threaded=threaded)
+    sim, thr, est, schedules = _difs(apps, m, threaded=threaded,
+                                     scheduler=scheduler)
     out = [_report("64core/simulated", sim, band=6.0,
                    extra=f"amtha_ms={1e3 * float(np.mean(est)):.1f}")]
+    out.append(_report("64core/batched", _batched_difs(apps, m, schedules),
+                       band=6.0))
     if thr:
         out.append(_report("64core/threaded", thr, band=6.0))
     return out
 
 
-def comm_sweep(n_apps: int = 6):
+def comm_sweep(n_apps: int = 6, scheduler: str = "engine"):
     """§6: 'As the volume of communications ... increases, so does the
-    error.' Scale the volume range and watch mean |%Dif| grow."""
+    error.' Scale the volume range and watch mean |%Dif| grow (the
+    contention-aware event simulator is the T_exec source — contention
+    is the error the paper attributes to shared memory levels)."""
     m = dell_poweredge_1950()
     rows = []
     for scale in (1.0, 10.0, 100.0, 1000.0):
         p = SynthParams(n_tasks=(15, 25),
                         comm_volume=(1000.0 * scale, 10000.0 * scale))
         apps = _suite(p, n_apps, seed=500)
-        sim, _, _ = _difs(apps, m, jitter=0.0)
+        sim, _, _, _ = _difs(apps, m, jitter=0.0, scheduler=scheduler)
         rows.append((scale, float(np.mean(np.abs(sim)))))
         print(f"comm_sweep: volume_x{scale:<7g} mean|%Dif|={rows[-1][1]:.3f}")
     assert rows[-1][1] >= rows[0][1] - 1e-9, \
@@ -100,14 +130,17 @@ def comm_sweep(n_apps: int = 6):
     return rows
 
 
-def vs_heft(n_apps: int = 10):
+def vs_heft(n_apps: int = 10, scheduler: str = "engine"):
     m = dell_poweredge_1950()
     apps = _suite(SynthParams(n_tasks=(15, 25)), n_apps, seed=900)
+    amtha_fn = get_scheduler(scheduler)
+    heft_fn = get_scheduler("heft")
+    etf_fn = get_scheduler("etf")
     ratios_h, ratios_e = [], []
     for g in apps:
-        a = amtha_schedule(g, m).makespan()
-        h = heft_schedule(g, m).makespan()
-        e = etf_schedule(g, m).makespan()
+        a = amtha_fn(g, m).makespan()
+        h = heft_fn(g, m).makespan()
+        e = etf_fn(g, m).makespan()
         ratios_h.append(a / h)
         ratios_e.append(a / e)
     print(f"vs_heft: AMTHA/HEFT makespan={np.mean(ratios_h):.3f} "
@@ -117,18 +150,19 @@ def vs_heft(n_apps: int = 10):
             "amtha_over_etf": float(np.mean(ratios_e))}
 
 
-def scaling():
+def scaling(scheduler: str = "engine"):
     """Algorithm cost growth: the §7 future-work 128-core config included."""
+    schedule_fn = get_scheduler(scheduler)
     rows = []
     for n_tasks, blades in ((20, 1), (80, 4), (160, 8), (160, 16)):
         m = hp_bl260c(n_blades=blades)
         g = generate_app(SynthParams(n_tasks=(n_tasks, n_tasks)), seed=7)
         t0 = time.perf_counter()
-        s = amtha_schedule(g, m)
+        s = schedule_fn(g, m)
         dt = time.perf_counter() - t0
         rows.append((n_tasks, m.n_cores, dt, s.makespan()))
         print(f"scaling: tasks={n_tasks:4d} cores={m.n_cores:4d} "
-              f"amtha_s={dt:.3f} makespan={s.makespan():.1f}")
+              f"{scheduler}_s={dt:.3f} makespan={s.makespan():.1f}")
     return rows
 
 

@@ -1,7 +1,11 @@
 """Benchmark entry point: one function per paper table (+ the beyond-
 paper placement benchmark and the roofline table from the dry-run).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--scheduler NAME]
+
+``--scheduler`` picks the mapper from the core registry (``engine`` is
+the array-backed default, ``amtha`` the seed reference — both produce
+identical placements, so the tables only differ in mapping runtime).
 """
 
 from __future__ import annotations
@@ -11,9 +15,14 @@ import sys
 
 
 def main() -> None:
+    from repro.core import SCHEDULERS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller suites (CI-sized)")
+    ap.add_argument("--scheduler", default="engine",
+                    choices=sorted(SCHEDULERS),
+                    help="registry name of the mapping algorithm")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as T
@@ -21,16 +30,27 @@ def main() -> None:
     n8 = 6 if args.quick else 20
     n64 = 3 if args.quick else 8
 
+    print(f"== scheduler: {args.scheduler!r} "
+          f"({SCHEDULERS[args.scheduler].doc}) ==")
     print("== Table: 8-core prediction error (paper: <4%) ==")
-    T.table_8core(n_apps=n8, threaded=True)
+    T.table_8core(n_apps=n8, threaded=True, scheduler=args.scheduler)
     print("== Table: 64-core prediction error (paper: <6%) ==")
-    T.table_64core(n_apps=n64, threaded=not args.quick)
+    T.table_64core(n_apps=n64, threaded=not args.quick,
+                   scheduler=args.scheduler)
+    # comm_sweep (contention-error growth) and vs_heft (AMTHA vs the
+    # baselines) encode AMTHA-specific claims: when the baselines are
+    # selected, these sections keep the AMTHA-equivalent array engine.
+    amtha_like = args.scheduler if args.scheduler in ("amtha", "engine") \
+        else "engine"
+    if amtha_like != args.scheduler:
+        print(f"(comm_sweep/vs_heft are AMTHA claims; using "
+              f"{amtha_like!r} there instead of {args.scheduler!r})")
     print("== Figure: error vs communication volume (paper §6) ==")
-    T.comm_sweep(n_apps=3 if args.quick else 6)
+    T.comm_sweep(n_apps=3 if args.quick else 6, scheduler=amtha_like)
     print("== Table: AMTHA vs HEFT/ETF makespan ==")
-    T.vs_heft(n_apps=5 if args.quick else 10)
+    T.vs_heft(n_apps=5 if args.quick else 10, scheduler=amtha_like)
     print("== Table: algorithm scaling (incl. §7 128-core config) ==")
-    T.scaling()
+    T.scaling(scheduler=args.scheduler)
     print("== Beyond-paper: AMTHA expert placement vs round-robin ==")
     T.expert_placement()
 

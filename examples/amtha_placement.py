@@ -6,6 +6,11 @@
    AMTHA shifts the stage boundary toward the faster pod; its T_est is
    the mapping layer's predicted step time.
 
+Both placements run the mapper selected from the core registry —
+``scheduler="engine"`` is the array-backed fast path (identical
+placements to the seed ``"amtha"``, so swapping names only changes
+runtime).
+
     PYTHONPATH=src python examples/amtha_placement.py
 """
 
@@ -22,7 +27,7 @@ def expert_demo():
     # lognormal ~ x10 spread between hot and cold experts (a single
     # dominating expert would lower-bound every placement equally)
     loads = rng.lognormal(0.0, 1.0, 128) * 1e9
-    amtha = place_experts(list(loads), 16)
+    amtha = place_experts(list(loads), 16, scheduler="engine")
     rr = round_robin_placement(list(loads), 16)
     a, r = (max(p.device_loads(list(loads), 16)) for p in (amtha, rr))
     print(f"max device load: amtha={a:.3g} rr={r:.3g} "
@@ -37,7 +42,8 @@ def stage_demo():
     act_bytes = [2 * 4096 * 8192] * 15
     fast = TPU_V5E_PEAK_FLOPS * 256
     for speeds in ([fast, fast], [fast, 1.25 * fast]):
-        sa = assign_layers_to_pods(layer_flops, act_bytes, speeds)
+        sa = assign_layers_to_pods(layer_flops, act_bytes, speeds,
+                                   scheduler="engine")
         counts = [sa.layer_to_pod.count(p) for p in range(len(speeds))]
         print(f"pod speeds {[f'{s:.3g}' for s in speeds]}: "
               f"layers per pod {counts}, T_est={sa.t_est * 1e3:.3f} ms")

@@ -1,17 +1,19 @@
 """Quickstart: the paper's pipeline end to end in ~40 lines.
 
 1. generate a synthetic MPAHA application (§5.1 parameters);
-2. map it to the paper's 8-core machine with AMTHA;
+2. map it to the paper's 8-core machine with the registry's default
+   fast scheduler (``get_scheduler("engine")`` — the array engine,
+   placement-identical to the seed AMTHA);
 3. T_est = schedule makespan; compare with the contention-aware
-   simulator and the threaded wall-clock executor (paper Eq. 4);
-4. compare against HEFT/ETF.
+   simulator (``get_simulator("arrays")`` — the lowered event loop)
+   and the threaded wall-clock executor (paper Eq. 4);
+4. compare against HEFT/ETF, picked from the same registry.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (SynthParams, amtha_schedule, dell_poweredge_1950,
-                        etf_schedule, execute_threaded, generate_app,
-                        heft_schedule, simulate, validate)
+from repro.core import (SynthParams, dell_poweredge_1950, execute_threaded,
+                        generate_app, get_scheduler, get_simulator, validate)
 
 
 def main():
@@ -20,7 +22,10 @@ def main():
     print(f"app: {len(app.tasks)} tasks, {app.n_subtasks} subtasks, "
           f"{len(app.edges)} comm edges; machine: {machine.name}")
 
-    schedule = amtha_schedule(app, machine)
+    amtha = get_scheduler("engine")         # array engine == seed placements
+    simulate = get_simulator("arrays")      # lowered event loop == seed sim
+
+    schedule = amtha(app, machine)
     validate(schedule, app, machine)
     t_est = schedule.makespan()
     print(f"AMTHA T_est = {t_est:.2f} s")
@@ -34,9 +39,10 @@ def main():
           f"%Dif_rel = {real.dif_rel(t_est):+.2f}%  "
           f"(wall {real.wall_seconds:.2f}s)")
 
-    print(f"HEFT makespan = {heft_schedule(app, machine).makespan():.2f} s "
-          f"(subtask-level, no task coherence)")
-    print(f"ETF  makespan = {etf_schedule(app, machine).makespan():.2f} s")
+    for name in ("heft", "etf"):
+        mk = get_scheduler(name)(app, machine).makespan()
+        print(f"{name.upper():4s} makespan = {mk:.2f} s "
+              f"(subtask-level, no task coherence)")
 
     # per-core occupancy
     for c in range(machine.n_cores):

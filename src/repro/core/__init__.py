@@ -3,17 +3,32 @@
 # them (machine models, baselines, discrete-event + threaded executors,
 # the §5.1 synthetic-app generator) and the beyond-paper placement layer
 # that plugs AMTHA into the JAX framework (expert + layer/pod mapping).
+#
+# Entry points are unified behind the Scheduler protocol + registries
+# (core/registry.py): ``get_scheduler("engine")`` / ``get_simulator``
+# select implementations by name; the shared array IR (core/lowering.py)
+# and the batched simulator (core/sim_engine.py) are the fast
+# whole-suite evaluation path.
 from .amtha import AMTHA, amtha_schedule
 from .engine import ArrayAMTHA, engine_schedule
 from .executor import ExecResult, execute_threaded
 from .heft import etf_schedule, heft_schedule
+from .lowering import (GraphArrays, MachineArrays, ScenarioArrays,
+                       ScenarioBatch, batch_scenarios, drain_matrix,
+                       graph_arrays, lower_scenario, machine_arrays,
+                       repeat_batch)
 from .machine import (MachineModel, cluster_of_multicores,
                       dell_poweredge_1950, heterogeneous_cluster, hp_bl260c,
                       tpu_v5e_pod)
 from .mpaha import AppGraph, CommEdge, Subtask, merge_graphs
 from .placement import (assign_layers_to_pods, place_experts,
                         round_robin_placement)
+from .registry import (SCHEDULERS, SIMULATORS, Scheduler, get_scheduler,
+                       get_simulator, register_scheduler, register_simulator,
+                       scheduler_entry)
 from .schedule import Schedule, ScheduleError, validate
+from .sim_engine import (BatchSimResult, simulate_arrays, simulate_batch,
+                         simulate_scenario, simulate_suite)
 from .simulator import SimResult, simulate
 from .timeline import Timeline
 from .synth import (SynthParams, generate_app, paper_suite_8core,
@@ -29,4 +44,14 @@ __all__ = [
     "heft_schedule", "etf_schedule", "SynthParams", "generate_app",
     "paper_suite_8core", "paper_suite_64core", "place_experts",
     "round_robin_placement", "assign_layers_to_pods",
+    # scenario IR + array/batched simulation
+    "GraphArrays", "MachineArrays", "ScenarioArrays", "ScenarioBatch",
+    "batch_scenarios", "drain_matrix", "graph_arrays", "lower_scenario",
+    "machine_arrays", "repeat_batch", "BatchSimResult", "simulate_arrays",
+    "simulate_batch",
+    "simulate_scenario", "simulate_suite",
+    # scheduler/simulator registry
+    "Scheduler", "SCHEDULERS", "SIMULATORS", "get_scheduler",
+    "get_simulator", "register_scheduler", "register_simulator",
+    "scheduler_entry",
 ]

@@ -31,6 +31,7 @@ from heapq import heappop, heappush
 
 import numpy as np
 
+from . import lowering
 from .amtha import AMTHA
 from .machine import MachineModel
 from .mpaha import AppGraph
@@ -39,23 +40,14 @@ from .timeline import Timeline
 
 
 def comm_matrices(machine: MachineModel) -> tuple[np.ndarray, np.ndarray]:
-    """(latency, bandwidth) matrices over core pairs, cached on the
-    machine (same-core entries are (0, inf) so ``lat + vol / bw`` is an
-    exact 0.0 there, matching ``comm_time``'s same-core short-circuit)."""
-    cached = getattr(machine, "_comm_matrices", None)
-    if cached is not None:
-        return cached
-    n = machine.n_cores
-    lat = np.zeros((n, n))
-    bw = np.full((n, n), np.inf)
-    for a in range(n):
-        for b in range(n):
-            lvl = machine.comm_level(a, b)
-            if lvl is not None:
-                lat[a, b] = lvl.latency
-                bw[a, b] = lvl.bandwidth
-    machine._comm_matrices = (lat, bw)
-    return lat, bw
+    """Deprecated alias for :func:`repro.core.lowering.comm_matrices`.
+
+    The engine used to own this lowering; it now lives in the shared
+    scenario IR (one source of truth for the comm matrices the engine,
+    the kernels and the simulator all gather from). Kept as a thin
+    wrapper so existing callers keep working — import from
+    ``repro.core.lowering`` in new code."""
+    return lowering.comm_matrices(machine)
 
 
 class _HeapRank(dict):
@@ -88,10 +80,9 @@ class ArrayAMTHA(AMTHA):
                  sid_offset: int = 0):
         super().__init__(graph, machine, warm_start=warm_start,
                          release_time=release_time, sid_offset=sid_offset)
-        self.W = np.array([st.times for st in graph.subtasks])      # (S, T)
-        self.Wc = np.ascontiguousarray(
-            self.W[:, np.asarray(machine.core_types)])              # (S, C)
-        self.lat, self.bw = comm_matrices(machine)
+        self.W = lowering.graph_arrays(graph).exec_type             # (S, T)
+        self.Wc = lowering.exec_matrix(graph, machine)              # (S, C)
+        self.lat, self.bw = lowering.comm_matrices(machine)
         # row-list views of the same matrices for the scalar chain walk:
         # identical IEEE-754 values, but plain-float arithmetic instead
         # of np.float64 scalar ops (which cost ~5x per operation)

@@ -1,0 +1,473 @@
+"""Shared scenario array IR: one lowering from (graph, machine, schedule).
+
+Before this module, three subsystems each re-derived their own array
+view of the same objects: ``core/engine.py`` precomputed exec/comm
+matrices for the vectorized chain walk, ``kernels/sched_ref.py`` built
+the ``drain_matrix`` scoring input, and the simulator walked the object
+graph directly. The IR here is the single source of truth all of them
+gather from:
+
+* :class:`MachineArrays` — ``(C, C)`` comm latency/bandwidth matrices
+  resolved from the location hierarchy (same-core entries are
+  ``(0, inf)`` so ``lat + vol / bw`` is an exact ``0.0``), plus the
+  *shared-level-instance* id per core pair — the contention domain the
+  fluid simulator charges transfers against;
+* :class:`GraphArrays` — the ``(S, T)`` per-type exec-time matrix and
+  CSR predecessor/successor adjacency with edge volumes, in the exact
+  order ``AppGraph.finalize`` materialises them (chain edge first, then
+  comm edges in insertion order — event and jitter-draw order depend on
+  it);
+* :class:`ScenarioArrays` — one *scenario* = (graph, machine, schedule
+  [, releases]): exec times gathered through ``core_types`` onto cores,
+  placement arrays, per-core schedule-order arrays, and per-subtask
+  release floors. This is what the array simulator executes;
+* :class:`ScenarioBatch` — many scenarios padded to one fixed shape
+  ``(B, S, P)`` for the batched relaxation step (``kernels/sim_step.py``
+  is the accelerator form of the same step). Scenarios may mix machines
+  and graphs freely — the lowering already resolved everything to
+  per-edge lags, so core counts never appear in the batch.
+
+All arrays are frozen (``writeable=False``): consumers share them.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .machine import MachineModel
+from .mpaha import AppGraph
+
+
+def _frozen(a: np.ndarray) -> np.ndarray:
+    a.setflags(write=False)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# machine lowering
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MachineArrays:
+    """Per-machine constants, cached on the machine object."""
+
+    n_cores: int
+    n_types: int
+    core_types: np.ndarray          # (C,)   int32
+    lat: np.ndarray                 # (C, C) f64, 0 on the diagonal
+    bw: np.ndarray                  # (C, C) f64, inf on the diagonal
+    pair_instance: np.ndarray       # (C, C) int32, -1 diag; shared-level id
+    inst_level: np.ndarray          # (I,)   int32 — hierarchy depth per id
+    inst_lat: np.ndarray            # (I,)   f64
+    inst_bw: np.ndarray             # (I,)   f64
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.inst_level)
+
+
+def machine_arrays(machine: MachineModel) -> MachineArrays:
+    cached = getattr(machine, "_machine_arrays", None)
+    if cached is not None and cached.n_cores == machine.n_cores:
+        return cached
+    n = machine.n_cores
+    lat = np.zeros((n, n))
+    bw = np.full((n, n), np.inf)
+    pair = np.full((n, n), -1, np.int32)
+    # instance key exactly as the fluid simulator forms it: the hierarchy
+    # depth plus both location prefixes above it (equal for first-differ
+    # pairs, kept verbatim for the same-leaf fallback)
+    ids: dict[tuple, int] = {}
+    inst_level: list[int] = []
+    for a in range(n):
+        for b in range(n):
+            if a == b:
+                continue
+            d = machine.level_index(a, b)
+            lvl = machine.levels[d]
+            lat[a, b] = lvl.latency
+            bw[a, b] = lvl.bandwidth
+            key = (d, machine.locations[a][:d], machine.locations[b][:d])
+            iid = ids.setdefault(key, len(ids))
+            if iid == len(inst_level):
+                inst_level.append(d)
+            pair[a, b] = iid
+    levels = np.asarray(inst_level, np.int32)
+    ma = MachineArrays(
+        n_cores=n, n_types=machine.n_types,
+        core_types=_frozen(np.asarray(machine.core_types, np.int32)),
+        lat=_frozen(lat), bw=_frozen(bw), pair_instance=_frozen(pair),
+        inst_level=_frozen(levels),
+        inst_lat=_frozen(np.array([machine.levels[d].latency for d in levels])),
+        inst_bw=_frozen(np.array([machine.levels[d].bandwidth for d in levels])),
+    )
+    machine._machine_arrays = ma
+    return ma
+
+
+def comm_matrices(machine: MachineModel) -> tuple[np.ndarray, np.ndarray]:
+    """(latency, bandwidth) matrices over core pairs — the values
+    ``comm_time`` would produce, with same-core entries ``(0, inf)`` so
+    ``lat + vol / bw`` short-circuits to an exact ``0.0``."""
+    ma = machine_arrays(machine)
+    return ma.lat, ma.bw
+
+
+# ---------------------------------------------------------------------------
+# graph lowering
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GraphArrays:
+    """Machine-independent arrays of one MPAHA graph."""
+
+    n_subtasks: int
+    n_tasks: int
+    n_types: int
+    exec_type: np.ndarray           # (S, T) f64 — V_i(s, p) of the paper
+    task_of: np.ndarray             # (S,)   int32
+    pred_ptr: np.ndarray            # (S+1,) int32 — CSR over graph.preds
+    pred_sid: np.ndarray            # (E,)   int32
+    pred_vol: np.ndarray            # (E,)   f64
+    succ_ptr: np.ndarray            # (S+1,) int32 — CSR over graph.succs
+    succ_sid: np.ndarray            # (E,)   int32
+    succ_vol: np.ndarray            # (E,)   f64
+
+    def preds_of(self, sid: int) -> list[tuple[int, float]]:
+        lo, hi = self.pred_ptr[sid], self.pred_ptr[sid + 1]
+        return list(zip(self.pred_sid[lo:hi].tolist(),
+                        self.pred_vol[lo:hi].tolist()))
+
+
+def _csr(adj: list[list[tuple[int, float]]]):
+    ptr = np.zeros(len(adj) + 1, np.int32)
+    sid, vol = [], []
+    for i, row in enumerate(adj):
+        ptr[i + 1] = ptr[i] + len(row)
+        for s, v in row:
+            sid.append(s)
+            vol.append(v)
+    return (_frozen(ptr), _frozen(np.asarray(sid, np.int32)),
+            _frozen(np.asarray(vol, dtype=np.float64)))
+
+
+def graph_arrays(graph: AppGraph) -> GraphArrays:
+    """Lower one graph; cached on the graph, invalidated the same way
+    ``finalize`` detects mutation (subtask/edge counts)."""
+    fp = (len(graph.subtasks), len(graph.edges))
+    cached = getattr(graph, "_graph_arrays", None)
+    if cached is not None and cached[0] == fp:
+        return cached[1]
+    graph.finalize()
+    pred_ptr, pred_sid, pred_vol = _csr(graph.preds)
+    succ_ptr, succ_sid, succ_vol = _csr(graph.succs)
+    ga = GraphArrays(
+        n_subtasks=graph.n_subtasks, n_tasks=len(graph.tasks),
+        n_types=graph.n_types,
+        exec_type=_frozen(np.array([st.times for st in graph.subtasks],
+                                   dtype=np.float64).reshape(
+                                       graph.n_subtasks, graph.n_types)),
+        task_of=_frozen(np.asarray([st.task_id for st in graph.subtasks],
+                                   np.int32)),
+        pred_ptr=pred_ptr, pred_sid=pred_sid, pred_vol=pred_vol,
+        succ_ptr=succ_ptr, succ_sid=succ_sid, succ_vol=succ_vol,
+    )
+    graph._graph_arrays = (fp, ga)
+    return ga
+
+
+def exec_matrix(graph: AppGraph, machine: MachineModel) -> np.ndarray:
+    """(S, C) exec times gathered through ``core_types`` — the §3.3
+    chain-walk input of the array engine."""
+    ga = graph_arrays(graph)
+    return ga.exec_type[:, machine_arrays(machine).core_types]
+
+
+def drain_matrix(graphs: list[AppGraph], machine: MachineModel) -> np.ndarray:
+    """(apps × cores) serial drain times — the admission-screening
+    scoring input (one per-type work vector per app, gathered onto
+    cores)."""
+    ma = machine_arrays(machine)
+    per_type = np.stack([graph_arrays(g).exec_type.sum(axis=0)
+                         for g in graphs])
+    return per_type[:, ma.core_types]
+
+
+# ---------------------------------------------------------------------------
+# scenario lowering
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScenarioArrays:
+    """One (graph, machine, schedule[, releases]) evaluation scenario."""
+
+    graph: GraphArrays
+    machine: MachineArrays
+    exec_core: np.ndarray           # (S, C) f64 — exec_type through core_types
+    core_of: np.ndarray             # (S,)   int32 — assigned core per subtask
+    start: np.ndarray               # (S,)   f64 — scheduled interval
+    end: np.ndarray                 # (S,)   f64
+    order_ptr: np.ndarray           # (C+1,) int32 — per-core order, CSR
+    order_sid: np.ndarray           # (S,)   int32
+    release: np.ndarray             # (S,)   f64 — floor on start (0 = free)
+    release_order: np.ndarray       # int32 — sids with a floor, in the
+    #   caller's dict-insertion order (release events enter the event
+    #   heap in this order; ties in time break by it, like the seed)
+
+    @property
+    def n_subtasks(self) -> int:
+        return self.graph.n_subtasks
+
+    @property
+    def t_est(self) -> float:
+        """The schedule's makespan — the paper's predicted T_est."""
+        return float(self.end.max()) if len(self.end) else 0.0
+
+    def duration(self) -> np.ndarray:
+        """(S,) exec time on the assigned core (no jitter)."""
+        if not len(self.core_of):
+            return np.zeros(0)
+        return self.exec_core[np.arange(len(self.core_of)), self.core_of]
+
+    def prev_on_core(self) -> np.ndarray:
+        """(S,) sid of the preceding subtask in the core's schedule
+        order, or -1 — the implicit in-order execution edge."""
+        prev = np.full(self.graph.n_subtasks, -1, np.int64)
+        for c in range(self.machine.n_cores):
+            lo, hi = self.order_ptr[c], self.order_ptr[c + 1]
+            row = self.order_sid[lo:hi]
+            prev[row[1:]] = row[:-1]
+        return prev
+
+
+def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
+                   *, releases: dict[int, float] | None = None
+                   ) -> ScenarioArrays:
+    """Lower one scenario. The schedule must place exactly this graph's
+    subtasks (the merged-graph view of an online timeline qualifies)."""
+    ga = graph_arrays(graph)
+    ma = machine_arrays(machine)
+    s_count = ga.n_subtasks
+    if len(schedule.placements) != s_count or \
+            (s_count and set(schedule.placements) != set(range(s_count))):
+        raise ValueError(
+            f"schedule places {len(schedule.placements)} subtasks, graph has "
+            f"{s_count}; lower the merged graph for multi-app timelines")
+    core_of = np.zeros(s_count, np.int32)
+    start = np.zeros(s_count)
+    end = np.zeros(s_count)
+    for sid, p in schedule.placements.items():
+        core_of[sid] = p.core
+        start[sid] = p.start
+        end[sid] = p.end
+    order_ptr = np.zeros(ma.n_cores + 1, np.int32)
+    order_sid = np.zeros(s_count, np.int32)
+    k = 0
+    for c in range(ma.n_cores):
+        row = schedule.order_on_core(c)
+        order_ptr[c + 1] = order_ptr[c] + len(row)
+        order_sid[k:k + len(row)] = row
+        k += len(row)
+    release = np.zeros(s_count)
+    release_order: list[int] = []
+    if releases:
+        for sid, t in releases.items():
+            if not 0 <= sid < s_count:
+                raise ValueError(
+                    f"release for unknown subtask {sid} "
+                    f"(graph has {s_count}); sid namespaces drifted?")
+            release[sid] = float(t)
+            release_order.append(sid)
+    return ScenarioArrays(
+        graph=ga, machine=ma,
+        exec_core=_frozen(ga.exec_type[:, ma.core_types]),
+        core_of=_frozen(core_of), start=_frozen(start), end=_frozen(end),
+        order_ptr=_frozen(order_ptr), order_sid=_frozen(order_sid),
+        release=_frozen(release),
+        release_order=_frozen(np.asarray(release_order, np.int32)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# batching — fixed (B, S, P) shape for the relaxation step
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ScenarioBatch:
+    """Scenarios padded to one shape. ``pad`` (== S) is the sentinel
+    index: gather targets for missing predecessors / first-on-core
+    subtasks point at an always-zero slot, and their lags are -inf so
+    they never win the readiness max."""
+
+    n_scenarios: int
+    max_subtasks: int               # S (padded)
+    max_preds: int                  # P (>= 1)
+    n_sub: np.ndarray               # (B,)      int32 — valid subtask count
+    duration: np.ndarray            # (B, S)    f64 — exec on assigned core
+    release: np.ndarray             # (B, S)    f64
+    prev: np.ndarray                # (B, S)    int64 — in-order edge, S = none
+    pred: np.ndarray                # (B, S, P) int64 — dependency, S = pad
+    pred_lat: np.ndarray            # (B, S, P) f64 — comm latency, -inf pad
+    pred_volbw: np.ndarray          # (B, S, P) f64 — vol / bw, -inf pad
+    wave: np.ndarray                # (B, S)    int32 — topological level
+    t_est: np.ndarray               # (B,)      f64 — per-scenario makespan
+    depth: int                      # relaxation steps to reach fixpoint
+
+    @property
+    def valid(self) -> np.ndarray:
+        """(B, S) bool mask of real (non-padded) subtasks."""
+        return np.arange(self.max_subtasks)[None, :] < self.n_sub[:, None]
+
+
+def _scenario_waves(sa: ScenarioArrays, prev: np.ndarray) -> list[int]:
+    """Per-subtask topological level over deps ∪ in-order edges (the
+    longest path from a source, in subtasks, minus one). Wave ``w``
+    subtasks depend only on waves ``< w``, so one wave-ordered pass —
+    or ``max(wave) + 1`` synchronous sweeps — reaches the fixpoint.
+    Pure-Python Kahn walk: list indexing here is hot at batch-build
+    time and ~10x cheaper than NumPy scalar ops."""
+    n = sa.graph.n_subtasks
+    if n == 0:
+        return []
+    ptr = sa.graph.pred_ptr.tolist()
+    sid = sa.graph.pred_sid.tolist()
+    prev_l = prev.tolist()
+    indeg = [ptr[s + 1] - ptr[s] + (prev_l[s] >= 0) for s in range(n)]
+    succs: list[list[int]] = [[] for _ in range(n)]
+    for s in range(n):
+        for p in sid[ptr[s]:ptr[s + 1]]:
+            succs[p].append(s)
+        if prev_l[s] >= 0:
+            succs[prev_l[s]].append(s)
+    wave = [0] * n
+    stack = [s for s in range(n) if indeg[s] == 0]
+    seen = 0
+    while stack:
+        s = stack.pop()
+        seen += 1
+        w1 = wave[s] + 1
+        for t in succs[s]:
+            if wave[t] < w1:
+                wave[t] = w1
+            indeg[t] -= 1
+            if indeg[t] == 0:
+                stack.append(t)
+    assert seen == n, "scenario dependency graph has a cycle"
+    return wave
+
+
+def batch_scenarios(scenarios: list[ScenarioArrays]) -> ScenarioBatch:
+    """Pad scenarios (possibly of different graphs AND machines) to one
+    fixed-shape batch for :func:`repro.core.sim_engine.relax_batch_np`
+    / the ``sim_step`` kernel."""
+    if not scenarios:
+        raise ValueError("batch_scenarios needs at least one scenario")
+    b = len(scenarios)
+    s_max = max(sa.graph.n_subtasks for sa in scenarios)
+    p_max = max(1, max(int((sa.graph.pred_ptr[1:] - sa.graph.pred_ptr[:-1])
+                           .max(initial=0)) for sa in scenarios))
+    pad = s_max
+    n_sub = np.zeros(b, np.int32)
+    duration = np.zeros((b, s_max))
+    release = np.zeros((b, s_max))
+    prev = np.full((b, s_max), pad, np.int64)
+    pred = np.full((b, s_max, p_max), pad, np.int64)
+    pred_lat = np.full((b, s_max, p_max), -np.inf)
+    pred_volbw = np.full((b, s_max, p_max), -np.inf)
+    wave = np.zeros((b, s_max), np.int32)
+    t_est = np.zeros(b)
+    depth = 0
+    for i, sa in enumerate(scenarios):
+        n = sa.graph.n_subtasks
+        n_sub[i] = n
+        if n == 0:
+            continue
+        duration[i, :n] = sa.duration()
+        release[i, :n] = sa.release
+        prev_i = sa.prev_on_core()
+        has_prev = prev_i >= 0
+        prev[i, :n][has_prev] = prev_i[has_prev]
+        ptr, psid, pvol = sa.graph.pred_ptr, sa.graph.pred_sid, \
+            sa.graph.pred_vol
+        counts = (ptr[1:] - ptr[:-1]).astype(np.int64)
+        dst = np.repeat(np.arange(n), counts)       # edge -> consumer sid
+        col = np.arange(len(psid)) - np.repeat(ptr[:-1].astype(np.int64),
+                                               counts)
+        cp = sa.core_of[psid]
+        cs = sa.core_of[dst]
+        # same-core / volume-free edges arrive instantly (no latency),
+        # matching the event simulator; same-core bw is inf so vol/bw
+        # is an exact 0.0 there already
+        lag_lat = np.where(pvol <= 0.0, 0.0, sa.machine.lat[cp, cs])
+        lag_volbw = np.where(pvol <= 0.0, 0.0, pvol / sa.machine.bw[cp, cs])
+        pred[i, dst, col] = psid
+        pred_lat[i, dst, col] = lag_lat
+        pred_volbw[i, dst, col] = lag_volbw
+        waves_i = _scenario_waves(sa, prev_i)
+        wave[i, :n] = waves_i
+        t_est[i] = sa.t_est
+        depth = max(depth, max(waves_i) + 1 if waves_i else 0)
+    return ScenarioBatch(
+        n_scenarios=b, max_subtasks=s_max, max_preds=p_max,
+        n_sub=_frozen(n_sub), duration=_frozen(duration),
+        release=_frozen(release), prev=_frozen(prev), pred=_frozen(pred),
+        pred_lat=_frozen(pred_lat), pred_volbw=_frozen(pred_volbw),
+        wave=_frozen(wave), t_est=_frozen(t_est), depth=depth)
+
+
+def repeat_batch(batch: ScenarioBatch, k: int) -> ScenarioBatch:
+    """Tile a batch ``k`` times along the scenario axis (the jitter- or
+    seed-sweep shape: same scenarios, different draws) without paying
+    the batch construction again."""
+    if k <= 1:
+        return batch
+    rep = {f: _frozen(np.tile(getattr(batch, f),
+                              (k,) + (1,) * (getattr(batch, f).ndim - 1)))
+           for f in ("n_sub", "duration", "release", "prev", "pred",
+                     "pred_lat", "pred_volbw", "wave", "t_est")}
+    return ScenarioBatch(
+        n_scenarios=batch.n_scenarios * k,
+        max_subtasks=batch.max_subtasks, max_preds=batch.max_preds,
+        depth=batch.depth, **rep)
+
+
+def dense_lags(batch: ScenarioBatch) -> tuple[np.ndarray, np.ndarray]:
+    """(B, S, S) dense latency / vol-over-bw lag tensors for the
+    ``sim_step`` kernel (``-inf`` where no edge): entry ``[b, t, q]`` is
+    the lag of edge ``q -> t``. In-order core edges appear as 0-lag
+    entries; parallel edges between the same pair keep the largest
+    total lag (the only one that can win the readiness max). Fully
+    vectorized scatter (the kernel path must not pay a Python triple
+    loop per call) and cached on the batch."""
+    cached = batch.__dict__.get("_dense_lags")
+    if cached is not None:
+        return cached
+    b, s = batch.n_scenarios, batch.max_subtasks
+    # all edges incl. the zero-lag in-order one, sentinel column q = s
+    src = np.concatenate([batch.pred, batch.prev[:, :, None]], axis=2)
+    e_lat = np.concatenate(
+        [batch.pred_lat,
+         np.where(batch.prev[:, :, None] < s, 0.0, -np.inf)], axis=2)
+    e_volbw = np.concatenate(
+        [batch.pred_volbw,
+         np.where(batch.prev[:, :, None] < s, 0.0, -np.inf)], axis=2)
+    # flat (b, t, q) slot per edge, width s+1 so the sentinel lands in a
+    # dropped column; keep only the max-total-lag edge per slot
+    slot = ((np.arange(b)[:, None, None] * s
+             + np.arange(s)[None, :, None]) * (s + 1) + src).reshape(-1)
+    total = (e_lat + e_volbw).reshape(-1)
+    real = np.isfinite(total)
+    slot, total = slot[real], total[real]
+    best = np.full(b * s * (s + 1), -np.inf)
+    np.maximum.at(best, slot, total)
+    win = total == best[slot]
+    lat_flat = np.full(b * s * (s + 1), -np.inf)
+    volbw_flat = np.full(b * s * (s + 1), -np.inf)
+    lat_flat[slot[win]] = e_lat.reshape(-1)[real][win]
+    volbw_flat[slot[win]] = e_volbw.reshape(-1)[real][win]
+    lat = lat_flat.reshape(b, s, s + 1)[:, :, :s]
+    volbw = volbw_flat.reshape(b, s, s + 1)[:, :, :s]
+    object.__setattr__(batch, "_dense_lags", (lat, volbw))
+    return lat, volbw

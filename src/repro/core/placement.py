@@ -25,9 +25,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .amtha import amtha_schedule
 from .machine import (TPU_V5E_DCI_BW, TPU_V5E_ICI_BW, TPU_V5E_PEAK_FLOPS,
                       CommLevel, MachineModel)
+from .registry import get_scheduler
 from .mpaha import AppGraph
 from .schedule import Schedule
 
@@ -69,12 +69,15 @@ def ep_machine(n_devices: int) -> MachineModel:
 
 
 def place_experts(loads_flops: list[float], n_devices: int,
-                  experts_per_device: int | None = None) -> ExpertPlacement:
+                  experts_per_device: int | None = None,
+                  scheduler: str = "engine") -> ExpertPlacement:
     """AMTHA placement of experts onto EP devices. If
     ``experts_per_device`` is given (sharding needs equal groups), the
     assignment is balanced greedily from AMTHA's ordering to exactly
     that group size — the permutation is then directly usable as a
-    weight reorder for an evenly-sharded expert axis."""
+    weight reorder for an evenly-sharded expert axis. ``scheduler``
+    picks the mapper from the registry (the array engine by default —
+    placement-identical to the seed)."""
     n_exp = len(loads_flops)
     if experts_per_device is None:
         experts_per_device = n_exp // n_devices
@@ -82,7 +85,7 @@ def place_experts(loads_flops: list[float], n_devices: int,
 
     machine = ep_machine(n_devices)
     graph = expert_graph(loads_flops)
-    sched = amtha_schedule(graph, machine)
+    sched = get_scheduler(scheduler)(graph, machine)
 
     # AMTHA order of assignment, capacity-constrained to equal groups:
     # walk experts by decreasing load (AMTHA's rank order for independent
@@ -157,7 +160,8 @@ def pod_machine(pod_types: list[int], n_types: int) -> MachineModel:
 def assign_layers_to_pods(layer_flops: list[float],
                           activation_bytes: list[float],
                           pod_speed_flops: list[float],
-                          pod_types: list[int] | None = None) -> StageAssignment:
+                          pod_types: list[int] | None = None,
+                          scheduler: str = "engine") -> StageAssignment:
     """Map layer blocks to pods with AMTHA; the DCI level penalizes every
     cross-pod activation edge, so AMTHA naturally produces (near-)
     contiguous stages and shifts the boundary toward faster pods."""
@@ -166,6 +170,6 @@ def assign_layers_to_pods(layer_flops: list[float],
         pod_types = list(range(n_types))
     g = layer_graph(layer_flops, activation_bytes, pod_speed_flops)
     m = pod_machine(pod_types, n_types)
-    sched = amtha_schedule(g, m)
+    sched = get_scheduler(scheduler)(g, m)
     layer_to_pod = [sched.core_of(g.tasks[i][0]) for i in range(len(layer_flops))]
     return StageAssignment(layer_to_pod, sched.makespan(), sched)

@@ -39,7 +39,13 @@ class SimResult:
     subtask_end: dict[int, float]
 
     def dif_rel(self, t_est: float) -> float:
-        """Paper Eq. (4): %Dif_rel = (T_exec - T_est)/T_exec * 100."""
+        """Paper Eq. (4): %Dif_rel = (T_exec - T_est)/T_exec * 100.
+
+        An empty or degenerate scenario (``t_exec == 0``) has nothing
+        to mispredict — the error is defined as 0 instead of dividing
+        by zero."""
+        if self.t_exec == 0.0:
+            return 0.0
         return (self.t_exec - t_est) / self.t_exec * 100.0
 
 
@@ -186,4 +192,4 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
     if len(done) != graph.n_subtasks:
         missing = set(range(graph.n_subtasks)) - set(done)
         raise RuntimeError(f"simulation deadlock; unfinished: {missing}")
-    return SimResult(max(done.values()), done)
+    return SimResult(max(done.values(), default=0.0), done)

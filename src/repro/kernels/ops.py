@@ -11,6 +11,7 @@ from . import flash_attention as _fa
 from . import flash_decode as _fd
 from . import rmsnorm as _rn
 from . import sched_score as _ss
+from . import sim_step as _sim
 from . import ssd_scan as _ssd
 
 
@@ -40,6 +41,16 @@ def sched_score(drain, frontiers, release, *, apps_block=128,
     return _ss.sched_score(drain, frontiers, release,
                            apps_block=apps_block, cores_block=cores_block,
                            interpret=not _on_tpu())
+
+
+def sim_step(end, lat, volbw, duration, release, *, sub_block=128):
+    return _sim.sim_step(end, lat, volbw, duration, release,
+                         sub_block=sub_block, interpret=not _on_tpu())
+
+
+def sim_relax(lat, volbw, duration, release, *, n_steps, sub_block=128):
+    return _sim.sim_relax(lat, volbw, duration, release, n_steps=n_steps,
+                          sub_block=sub_block, interpret=not _on_tpu())
 
 
 def flash_decode(q, k_cache, v_cache, pos, *, scale=None, softcap=None,

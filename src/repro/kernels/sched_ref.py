@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.lowering import drain_matrix as _drain_matrix
+
 
 def sched_score_np(drain, frontiers, release) -> np.ndarray:
     """Oracle for ``sched_score``: elementwise
@@ -21,8 +23,8 @@ def sched_score_np(drain, frontiers, release) -> np.ndarray:
 def drain_matrix(graphs, machine) -> np.ndarray:
     """(apps × cores) serial drain times — the scoring input.
 
-    Built per app as a (n_types,) work vector gathered over
-    ``machine.core_types``."""
-    per_type = np.array([[sum(st.times[t] for st in g.subtasks)
-                          for t in range(g.n_types)] for g in graphs])
-    return per_type[:, np.asarray(machine.core_types)]
+    Deprecated alias: the lowering lives in
+    :func:`repro.core.lowering.drain_matrix` now (the shared scenario
+    IR owns every graph/machine -> array derivation); kept so kernel
+    callers don't carry a private lowering copy."""
+    return _drain_matrix(graphs, machine)

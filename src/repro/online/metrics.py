@@ -1,9 +1,10 @@
 """Service metrics for a multiprogrammed timeline.
 
-``evaluate`` replays the admitted timeline through the discrete-event
-simulator (``core.simulate`` with the arrival-injection hook and memory
-contention on), then reports the quantities a streaming service cares
-about:
+``evaluate`` replays the admitted timeline through a registry-selected
+discrete-event simulator (the ``"arrays"`` lowered event loop by
+default — bit-for-bit the seed ``"events"`` path — with the
+arrival-injection hook and memory contention on), then reports the
+quantities a streaming service cares about:
 
 * throughput — completed apps per second over the busy span;
 * response time — per-app ``finish - arrival`` (queueing + service),
@@ -23,7 +24,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.simulator import simulate
+from ..core.registry import get_simulator
 from .state import ClusterState
 
 
@@ -77,14 +78,18 @@ class OnlineMetrics:
 
 
 def evaluate(state: ClusterState, contention: bool = True,
-             jitter: float = 0.0, seed: int = 0) -> OnlineMetrics:
-    """Simulate the committed timeline and score it."""
+             jitter: float = 0.0, seed: int = 0,
+             simulator: str = "arrays") -> OnlineMetrics:
+    """Simulate the committed timeline and score it. ``simulator``
+    selects the T_exec source by registry name (``"arrays"`` is the
+    lowered event loop — bit-for-bit the seed ``"events"`` path)."""
     if not state.apps:
         raise ValueError("no apps admitted")
     merged = state.merged_graph()
-    sim = simulate(merged, state.machine, state.schedule,
-                   contention=contention, jitter=jitter, seed=seed,
-                   releases=state.releases())
+    sim = get_simulator(simulator)(
+        merged, state.machine, state.schedule,
+        contention=contention, jitter=jitter, seed=seed,
+        releases=state.releases())
 
     outcomes = []
     for a in state.apps:

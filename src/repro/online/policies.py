@@ -135,12 +135,14 @@ class BatchedPolicy(Policy):
     def kernel_scores(batch, eng, now) -> list[float]:
         """One batched ``sched_score`` call over the (apps × cores)
         candidate matrix; per-app score = best core's drain estimate,
-        relative to ``now`` like the exact scorer. Degrades to the
-        NumPy oracle when JAX is unavailable (``sched_ref`` is the
-        JAX-free leaf both paths share)."""
+        relative to ``now`` like the exact scorer. The drain matrix
+        comes off the shared scenario IR (``core.lowering``); the score
+        degrades to the NumPy oracle when JAX is unavailable
+        (``sched_ref`` is the JAX-free leaf both paths share)."""
         import numpy as np
 
-        from ..kernels.sched_ref import drain_matrix, sched_score_np
+        from ..core.lowering import drain_matrix
+        from ..kernels.sched_ref import sched_score_np
         drain = drain_matrix([a.graph for a in batch], eng.machine)
         frontiers = eng.state.frontiers()
         release = [max(now, a.t_arrival) for a in batch]

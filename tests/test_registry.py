@@ -1,0 +1,94 @@
+"""The unified Scheduler protocol + registries: every entry point is
+reachable by name, produces equivalent results to its direct import,
+and the registries stay open for extension."""
+
+import numpy as np
+import pytest
+
+from repro.core import (SCHEDULERS, SIMULATORS, Scheduler, SynthParams,
+                        amtha_schedule, dell_poweredge_1950, engine_schedule,
+                        etf_schedule, generate_app, get_scheduler,
+                        get_simulator, heft_schedule, register_scheduler,
+                        register_simulator, scheduler_entry, simulate,
+                        validate)
+
+
+def pmap(s):
+    return {sid: (p.core, p.start, p.end) for sid, p in s.placements.items()}
+
+
+def test_builtin_schedulers_registered():
+    assert set(SCHEDULERS) >= {"amtha", "engine", "heft", "etf"}
+    assert get_scheduler("amtha") is amtha_schedule
+    assert get_scheduler("engine") is engine_schedule
+    assert get_scheduler("heft") is heft_schedule
+    assert get_scheduler("etf") is etf_schedule
+    assert set(SIMULATORS) >= {"events", "arrays"}
+    assert get_simulator("events") is simulate
+
+
+def test_task_coherence_metadata():
+    assert scheduler_entry("amtha").task_coherent
+    assert scheduler_entry("engine").task_coherent
+    assert not scheduler_entry("heft").task_coherent
+    assert not scheduler_entry("etf").task_coherent
+
+
+def test_unknown_names_raise():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        get_scheduler("simulated-annealing")
+    with pytest.raises(ValueError, match="unknown simulator"):
+        get_simulator("quantum")
+
+
+def test_registered_callables_satisfy_protocol():
+    for entry in SCHEDULERS.values():
+        assert isinstance(entry.fn, Scheduler)
+
+
+def test_registry_selected_pipeline_matches_direct_calls():
+    m = dell_poweredge_1950()
+    g = generate_app(SynthParams(n_tasks=(10, 15)), seed=4)
+    for name in SCHEDULERS:
+        entry = scheduler_entry(name)
+        s = entry.fn(g, m)
+        validate(s, g, m, require_task_coherence=entry.task_coherent)
+    a = get_scheduler("amtha")(g, m)
+    b = get_scheduler("engine")(g, m)
+    assert pmap(a) == pmap(b)
+    r_ev = get_simulator("events")(g, m, a, contention=True, jitter=0.02,
+                                   seed=1)
+    r_ar = get_simulator("arrays")(g, m, a, contention=True, jitter=0.02,
+                                   seed=1)
+    assert r_ev.t_exec == r_ar.t_exec
+    assert r_ev.subtask_end == r_ar.subtask_end
+
+
+def test_registries_are_open_but_collision_safe():
+    def toy(graph, machine, **kw):              # pragma: no cover - marker
+        raise NotImplementedError
+
+    register_scheduler("toy-sched", toy, task_coherent=False, doc="test")
+    register_simulator("toy-sim", toy, doc="test")
+    try:
+        assert get_scheduler("toy-sched") is toy
+        assert get_simulator("toy-sim") is toy
+        with pytest.raises(ValueError, match="already registered"):
+            register_scheduler("toy-sched", toy)
+        with pytest.raises(ValueError, match="already registered"):
+            register_simulator("toy-sim", toy)
+        register_scheduler("toy-sched", toy, overwrite=True)
+    finally:
+        SCHEDULERS.pop("toy-sched", None)
+        SIMULATORS.pop("toy-sim", None)
+
+
+def test_registry_names_drive_benchmark_helpers():
+    """paper_tables-style selection: the HEFT/ETF rows come from the
+    same registry, so every --scheduler choice is exercisable."""
+    m = dell_poweredge_1950()
+    g = generate_app(SynthParams(n_tasks=(5, 8)), seed=9)
+    makespans = {name: get_scheduler(name)(g, m).makespan()
+                 for name in ("amtha", "engine", "heft", "etf")}
+    assert makespans["amtha"] == makespans["engine"]
+    assert all(np.isfinite(v) and v > 0 for v in makespans.values())
