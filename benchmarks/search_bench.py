@@ -1,0 +1,151 @@
+"""Mapping-search benchmark: GA quality vs the heuristics + batched fitness.
+
+    PYTHONPATH=src python -m benchmarks.search_bench [--quick] [--json PATH]
+
+Two sections, appended to ``BENCH_search.json`` (one entry per run, the
+same perf-trajectory convention as the other benches):
+
+* **quality** — per scenario of the §5.1 synthetic suite: makespans of
+  ``amtha``/``engine`` (identical by construction), ``heft``/``etf``
+  and ``ga``, plus the GA's improvement over the engine heuristic. The
+  elite-seeding invariant (GA <= engine on *every* scenario) is
+  asserted row by row while it times.
+* **fitness** — the reason the GA is affordable: scoring one
+  population of B decoded candidates as a per-candidate
+  ``simulate_scenario`` loop vs ONE ``lower_population`` +
+  ``simulate_batch`` call (both analytic semantics, equivalence-gated
+  at 1e-9 relative before timing). Reports evaluations/sec for both
+  and the speedup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import (SynthParams, dell_poweredge_1950, generate_app,
+                        get_scheduler, hp_bl260c, lower_population,
+                        simulate_batch, simulate_scenario, validate)
+from repro.search import GAParams, decode_population, ga_schedule
+
+
+# ---------------------------------------------------------------------------
+def bench_quality(name: str, machine, params: SynthParams, n_apps: int,
+                  seed: int, ga_params: GAParams) -> list[dict]:
+    engine = get_scheduler("engine")
+    rows = []
+    for i in range(n_apps):
+        app = generate_app(params, seed + i)
+        mk = {}
+        for sched_name in ("engine", "heft", "etf"):
+            mk[sched_name] = get_scheduler(sched_name)(app, machine).makespan()
+        mk["amtha"] = mk["engine"]        # placement-identical (pinned by tests)
+        t0 = time.perf_counter()
+        ga = ga_schedule(app, machine, seed=0, params=ga_params)
+        ga_s = time.perf_counter() - t0
+        validate(ga, app, machine)
+        mk["ga"] = ga.makespan()
+        assert mk["ga"] <= mk["engine"] + 1e-9, \
+            f"elite-seeding invariant broken on {name}/{seed + i}"
+        gain = 100.0 * (1.0 - mk["ga"] / mk["engine"])
+        rows.append({"suite": name, "seed": seed + i,
+                     "tasks": len(app.tasks), "subtasks": app.n_subtasks,
+                     **{k: round(v, 3) for k, v in mk.items()},
+                     "ga_gain_pct": round(gain, 2), "ga_s": round(ga_s, 3)})
+        print(f"{name:>8} app {seed + i:3d} ({len(app.tasks):3d} tasks) "
+              f"engine {mk['engine']:8.2f}  heft {mk['heft']:8.2f}  "
+              f"etf {mk['etf']:8.2f}  ga {mk['ga']:8.2f} "
+              f"({gain:+5.2f}%)  [{ga_s:5.2f}s]")
+    mean_gain = float(np.mean([r["ga_gain_pct"] for r in rows]))
+    print(f"{name:>8} mean GA gain over engine: {mean_gain:+.2f}%")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def bench_fitness(name: str, machine, params: SynthParams, pop_size: int,
+                  seed: int) -> dict:
+    """One population, two scoring paths — the GA's inner loop."""
+    app = generate_app(params, seed)
+    rng = np.random.default_rng(seed)
+    pop = rng.integers(0, machine.n_cores, (pop_size, len(app.tasks)),
+                       dtype=np.int32)
+    schedules = decode_population(app, machine, pop)
+
+    # equivalence gate before timing
+    ref = [simulate_scenario(app, machine, s, contention=False).t_exec
+           for s in schedules]
+    got = simulate_batch(lower_population(app, machine, schedules)).t_exec
+    np.testing.assert_allclose(ref, got, rtol=1e-9)
+
+    t0 = time.perf_counter()
+    for s in schedules:
+        simulate_scenario(app, machine, s, contention=False)
+    loop_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    simulate_batch(lower_population(app, machine, schedules))
+    batch_s = time.perf_counter() - t0
+
+    row = {"suite": name, "pop": pop_size, "tasks": len(app.tasks),
+           "subtasks": app.n_subtasks,
+           "loop_s": round(loop_s, 4), "batched_s": round(batch_s, 4),
+           "loop_evals_per_s": round(pop_size / loop_s, 1),
+           "batched_evals_per_s": round(pop_size / batch_s, 1),
+           "speedup": round(loop_s / batch_s, 2)}
+    print(f"{name:>8} pop={pop_size:3d} loop {1e3 * loop_s:8.1f} ms "
+          f"({row['loop_evals_per_s']:8.1f} ev/s)  batched "
+          f"{1e3 * batch_s:7.1f} ms ({row['batched_evals_per_s']:8.1f} ev/s) "
+          f"-> {row['speedup']:5.1f}x")
+    return row
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default="BENCH_search.json")
+    args = ap.parse_args()
+
+    p8 = SynthParams(n_tasks=(15, 25))
+    m8 = dell_poweredge_1950()
+    ga_par = GAParams(pop_size=16, generations=10, refine_rounds=2,
+                      refine_moves=24) if args.quick else GAParams()
+
+    print("== GA vs heuristics (elite-seeded: GA <= engine, asserted) ==")
+    quality = bench_quality("8core", m8, p8,
+                            n_apps=3 if args.quick else 10, seed=0,
+                            ga_params=ga_par)
+    if not args.quick:
+        quality += bench_quality(
+            "64core", hp_bl260c(), SynthParams(n_tasks=(120, 200)),
+            n_apps=2, seed=100,
+            ga_params=GAParams(pop_size=16, generations=8, refine_rounds=2,
+                               refine_moves=32))
+
+    print("\n== batched fitness vs per-candidate simulate_scenario loop ==")
+    fitness = [bench_fitness("8core", m8, p8,
+                             pop_size=32 if args.quick else 64, seed=0)]
+    if not args.quick:
+        fitness.append(bench_fitness("64core", hp_bl260c(),
+                                     SynthParams(n_tasks=(120, 200)),
+                                     pop_size=32, seed=100))
+
+    out = Path(args.json)
+    history = []
+    if out.exists():
+        try:
+            history = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"quick": args.quick, "quality": quality,
+                    "fitness": fitness})
+    out.write_text(json.dumps(history, indent=1))
+    print(f"\nwrote quality/fitness sections -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,9 @@ def main():
         mk = get_scheduler(name)(app, machine).makespan()
         print(f"{name.upper():4s} makespan = {mk:.2f} s "
               f"(subtask-level, no task coherence)")
+    ga = get_scheduler("ga")(app, machine, generations=10)
+    print(f"GA   makespan = {ga.makespan():.2f} s "
+          f"(engine-seeded search: never worse than AMTHA)")
 
     # per-core occupancy
     for c in range(machine.n_cores):

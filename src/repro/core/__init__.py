@@ -15,8 +15,8 @@ from .executor import ExecResult, execute_threaded
 from .heft import etf_schedule, heft_schedule
 from .lowering import (GraphArrays, MachineArrays, ScenarioArrays,
                        ScenarioBatch, batch_scenarios, drain_matrix,
-                       graph_arrays, lower_scenario, machine_arrays,
-                       repeat_batch)
+                       graph_arrays, lower_population, lower_scenario,
+                       machine_arrays, repeat_batch)
 from .machine import (MachineModel, cluster_of_multicores,
                       dell_poweredge_1950, heterogeneous_cluster, hp_bl260c,
                       tpu_v5e_pod)
@@ -46,7 +46,8 @@ __all__ = [
     "round_robin_placement", "assign_layers_to_pods",
     # scenario IR + array/batched simulation
     "GraphArrays", "MachineArrays", "ScenarioArrays", "ScenarioBatch",
-    "batch_scenarios", "drain_matrix", "graph_arrays", "lower_scenario",
+    "batch_scenarios", "drain_matrix", "graph_arrays", "lower_population",
+    "lower_scenario",
     "machine_arrays", "repeat_batch", "BatchSimResult", "simulate_arrays",
     "simulate_batch",
     "simulate_scenario", "simulate_suite",

@@ -321,26 +321,42 @@ class ScenarioBatch:
         return np.arange(self.max_subtasks)[None, :] < self.n_sub[:, None]
 
 
+def _graph_wave_views(ga: GraphArrays) -> tuple[list[list[int]], list[int]]:
+    """(succ lists, pred counts) of the *graph's* dependency edges,
+    cached on the frozen GraphArrays: they are shared by every scenario
+    of the graph (a B-candidate mapping-search population pays them
+    once, not B times); only the in-order core edge is per-scenario."""
+    v = ga.__dict__.get("_wave_views")
+    if v is None:
+        n = ga.n_subtasks
+        sp = ga.succ_ptr.tolist()
+        ss = ga.succ_sid.tolist()
+        pp = ga.pred_ptr.tolist()
+        v = ([ss[sp[s]:sp[s + 1]] for s in range(n)],
+             [pp[s + 1] - pp[s] for s in range(n)])
+        object.__setattr__(ga, "_wave_views", v)
+    return v
+
+
 def _scenario_waves(sa: ScenarioArrays, prev: np.ndarray) -> list[int]:
     """Per-subtask topological level over deps ∪ in-order edges (the
     longest path from a source, in subtasks, minus one). Wave ``w``
     subtasks depend only on waves ``< w``, so one wave-ordered pass —
     or ``max(wave) + 1`` synchronous sweeps — reaches the fixpoint.
     Pure-Python Kahn walk: list indexing here is hot at batch-build
-    time and ~10x cheaper than NumPy scalar ops."""
+    time and ~10x cheaper than NumPy scalar ops. The graph's adjacency
+    rides in from the GraphArrays cache; the scenario's in-order edge
+    is the ``next_on_core`` inverse of ``prev``."""
     n = sa.graph.n_subtasks
     if n == 0:
         return []
-    ptr = sa.graph.pred_ptr.tolist()
-    sid = sa.graph.pred_sid.tolist()
+    succs, pred_count = _graph_wave_views(sa.graph)
     prev_l = prev.tolist()
-    indeg = [ptr[s + 1] - ptr[s] + (prev_l[s] >= 0) for s in range(n)]
-    succs: list[list[int]] = [[] for _ in range(n)]
-    for s in range(n):
-        for p in sid[ptr[s]:ptr[s + 1]]:
-            succs[p].append(s)
-        if prev_l[s] >= 0:
-            succs[prev_l[s]].append(s)
+    nxt = [-1] * n
+    for s, p in enumerate(prev_l):
+        if p >= 0:
+            nxt[p] = s
+    indeg = [c + (prev_l[s] >= 0) for s, c in enumerate(pred_count)]
     wave = [0] * n
     stack = [s for s in range(n) if indeg[s] == 0]
     seen = 0
@@ -349,6 +365,13 @@ def _scenario_waves(sa: ScenarioArrays, prev: np.ndarray) -> list[int]:
         seen += 1
         w1 = wave[s] + 1
         for t in succs[s]:
+            if wave[t] < w1:
+                wave[t] = w1
+            indeg[t] -= 1
+            if indeg[t] == 0:
+                stack.append(t)
+        t = nxt[s]
+        if t >= 0:
             if wave[t] < w1:
                 wave[t] = w1
             indeg[t] -= 1
@@ -415,6 +438,24 @@ def batch_scenarios(scenarios: list[ScenarioArrays]) -> ScenarioBatch:
         release=_frozen(release), prev=_frozen(prev), pred=_frozen(pred),
         pred_lat=_frozen(pred_lat), pred_volbw=_frozen(pred_volbw),
         wave=_frozen(wave), t_est=_frozen(t_est), depth=depth)
+
+
+def lower_population(graph: AppGraph, machine: MachineModel, schedules,
+                     *, releases: dict[int, float] | None = None
+                     ) -> ScenarioBatch:
+    """Lower ``B`` candidate schedules of ONE (graph, machine) pair into
+    a single batch — the mapping-search fitness shape (``repro.search``
+    scores whole populations through one ``simulate_batch`` call).
+
+    Same-graph batches need no per-scenario shape search: ``S`` and
+    ``P`` are fixed by the shared graph, the graph/machine arrays are
+    gathered once from the caches, and only the placement-dependent
+    arrays (core assignment, intervals, core order) differ per
+    candidate. ``releases`` (one shared map, e.g. online admission
+    floors) applies to every candidate."""
+    scenarios = [lower_scenario(graph, machine, s, releases=releases)
+                 for s in schedules]
+    return batch_scenarios(scenarios)
 
 
 def repeat_batch(batch: ScenarioBatch, k: int) -> ScenarioBatch:

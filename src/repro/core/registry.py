@@ -111,6 +111,20 @@ register_scheduler("heft", heft_schedule, task_coherent=False,
 register_scheduler("etf", etf_schedule, task_coherent=False,
                    doc="ETF baseline (subtask-level)")
 
+
+def _ga_schedule(graph, machine, **kwargs):
+    """Lazy bridge to :func:`repro.search.ga.ga_schedule` — the search
+    package sits above core (it consumes the registry, the IR and the
+    batched simulator), so the import happens at call time to keep the
+    layering acyclic while still listing ``ga`` at import time."""
+    from ..search.ga import ga_schedule
+    return ga_schedule(graph, machine, **kwargs)
+
+
+register_scheduler("ga", _ga_schedule,
+                   doc="bias-elitist GA + hill climber, batched-sim "
+                       "fitness, engine-seeded (never worse)")
+
 register_simulator("events", simulate,
                    doc="seed pure-Python discrete-event loop")
 register_simulator("arrays", simulate_scenario,

@@ -1,0 +1,60 @@
+"""Version-portability shims over the jax API surface this repo targets.
+
+The model/runtime code is written against the current jax API
+(``jax.shard_map``, ``jax.lax.pvary``, ``jax.sharding.AxisType``, the
+``AbstractMesh(axis_sizes, axis_names)`` constructor); the pinned
+environment may carry an older 0.4.x release where those either live
+under ``jax.experimental`` or do not exist at all. Importing the
+aliases from here keeps every call site version-gate-free:
+
+* :func:`shard_map` — ``jax.shard_map`` when present, else the
+  ``jax.experimental.shard_map`` one with ``check_rep=False`` (old jax
+  has no ``pvary`` varying-axes typing, so its replication checker
+  would reject code that is correct under the new semantics);
+* :func:`pvary` — identity on old jax (variance tracking is a type-
+  system feature; the values are unchanged);
+* :func:`mesh_axis_types_kwargs` — ``{'axis_types': (Auto,) * n}``
+  when ``jax.sharding.AxisType`` exists, ``{}`` otherwise;
+* :func:`abstract_mesh` — builds an ``AbstractMesh`` under either
+  constructor signature (old: ``((name, size), ...)`` pairs).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+
+if hasattr(jax.lax, "pvary"):
+    pvary = jax.lax.pvary
+else:
+    def pvary(x, axis_name):
+        return x
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """Extra ``Mesh``/``make_mesh`` kwargs marking every axis Auto
+    (GSPMD), on jax versions that type mesh axes."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-free mesh of the given shape for spec-only computations."""
+    cls = jax.sharding.AbstractMesh
+    if "shape_tuple" in inspect.signature(cls.__init__).parameters:
+        return cls(tuple(zip(axes, shape)))
+    return cls(tuple(shape), tuple(axes))

@@ -37,10 +37,16 @@ from .state import AdmittedApp, ClusterState
 class OnlineAMTHA:
     """Admission engine over a :class:`ClusterState`."""
 
-    def __init__(self, machine: MachineModel, use_engine: bool = True):
+    def __init__(self, machine: MachineModel, use_engine: bool = True,
+                 ga_refine: bool = False, ga_seed: int = 0,
+                 ga_params=None):
         self.machine = machine
         self.state = ClusterState(machine)
         self.use_engine = use_engine
+        # optional post-admission GA pass (see refine_ga); off by default
+        self.ga_refine = ga_refine
+        self.ga_seed = ga_seed
+        self.ga_params = ga_params
 
     # ------------------------------------------------------------------
     def predict(self, arrival: AppArrival, at: float | None = None) -> float:
@@ -101,7 +107,66 @@ class OnlineAMTHA:
             self.state.commit_trial(trial)
         reserved = self.state.allot_offset(arrival.graph)
         assert reserved == off
-        return self.state.commit(arrival, off, t_admit=t)
+        admitted = self.state.commit(arrival, off, t_admit=t)
+        if self.ga_refine and self._can_refine():
+            self.refine_ga(seed=self.ga_seed, params=self.ga_params)
+        return admitted
+
+    def _can_refine(self) -> bool:
+        """Refinement re-places everything, so it needs a still-unstarted
+        timeline (the flag path skips silently once work is running)."""
+        cur = self.state.schedule
+        return bool(cur.placements) and \
+            min(p.start for p in cur.placements.values()) >= \
+            self.state.now - 1e-9
+
+    # ------------------------------------------------------------------
+    def refine_ga(self, *, seed: int = 0, params=None) -> tuple[float, float]:
+        """Re-map the whole admitted workload with the GA mapping search
+        (``repro.search``), the current timeline riding as the elite
+        individual, and swap the cluster timeline for the evolved one
+        when it is strictly better. Returns ``(old, new)`` makespans.
+
+        This is a *planning* pass: it re-places every admitted subtask,
+        so it only applies while nothing has started running — i.e. the
+        cluster clock still precedes the earliest placed start (batch
+        admission, or admission at the current instant with queued-only
+        work). Outside that window it raises rather than rewrite
+        history. Release floors are preserved: every subtask of an app
+        keeps the app's admission floor ``max(t_admit, t_arrival)``,
+        exactly the ``release_time`` its incremental-AMTHA admission
+        used, so a refined timeline is valid under the same arrival
+        semantics."""
+        st = self.state
+        cur = st.schedule
+        if not st.apps or not cur.placements:
+            return 0.0, 0.0
+        earliest = min(p.start for p in cur.placements.values())
+        if earliest < st.now - 1e-9:
+            raise RuntimeError(
+                "GA refinement re-places every subtask; the timeline "
+                f"already has work started before now={st.now}")
+        from ..search.encoding import decode, encode
+        from ..search.ga import GAParams, ga_search
+        merged = st.merged_graph()
+        rel: dict[int, float] = {}
+        for a in st.apps:
+            floor = max(a.t_admit, a.arrival.t_arrival)
+            for s in a.global_sids():
+                rel[s] = floor
+        par = params or GAParams(pop_size=16, generations=10,
+                                 refine_rounds=2, refine_moves=32)
+        vec, _ = ga_search(merged, self.machine, seed=seed, params=par,
+                           elites=[encode(merged, cur)], releases=rel)
+        cand = decode(merged, self.machine, vec, releases=rel)
+        old = cur.makespan()
+        if cand.makespan() >= old - 1e-12:
+            return old, old
+        st.schedule = cand
+        for a in st.apps:
+            a.t_est_finish = max(cand.placements[s].end
+                                 for s in a.global_sids())
+        return old, cand.makespan()
 
 
 def replay_fifo(machine: MachineModel, workload: list[AppArrival],

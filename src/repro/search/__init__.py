@@ -1,0 +1,15 @@
+# Population-based mapping search over the scenario array IR: mapping
+# vectors + the task-coherent decoder (encoding.py), the bias-elitist
+# GA with batched simulate_batch fitness (ga.py) and the hill-climbing
+# single-task-move refiner (local.py). The core registry exposes the
+# whole thing as SCHEDULERS["ga"] via a lazy wrapper, so importing
+# repro.core is enough to reach it by name.
+from .encoding import decode, decode_population, encode, task_ids, topo_order
+from .ga import GAParams, ga_schedule, ga_search, population_fitness
+from .local import hill_climb
+
+__all__ = [
+    "GAParams", "ga_schedule", "ga_search", "population_fitness",
+    "decode", "decode_population", "encode", "task_ids", "topo_order",
+    "hill_climb",
+]

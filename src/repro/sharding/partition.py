@@ -23,6 +23,10 @@ from dataclasses import dataclass, field
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..jax_compat import abstract_mesh
+
+__all__ = ["MeshAxes", "Partitioner", "abstract_mesh"]
+
 
 @dataclass(frozen=True)
 class MeshAxes:
