@@ -1,0 +1,130 @@
+"""Autoplacement benchmark: searched stage/expert placement vs the
+contiguous heuristic and random mappings, on the repo's own models.
+
+    PYTHONPATH=src python -m benchmarks.autoplace_bench [--quick] [--json PATH]
+
+Appends one entry per run to ``BENCH_autoplace.json`` (the shared
+perf-trajectory convention). Two sections:
+
+* **pipeline** — per (config x machine model): predicted makespans of
+  the ``plan_stages``-style contiguous identity assignment, the
+  ``engine`` and ``ga`` searched placements, and a random vector, all
+  decoded under one cost model. The construction invariant
+  ``autoplaced <= heuristic`` is asserted on EVERY row. Machines: a
+  flat 8-chip v5e pod and a heterogeneous two-pod machine (second pod
+  at half speed) where search can beat contiguous-by-id placement.
+* **moe** — per expert-count: skewed routed loads placed by the
+  scheduler vs round-robin expert sharding.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro import autoplace
+from repro.configs import ARCHS
+from repro.core.machine import TPU_V5E_PEAK_FLOPS, tpu_v5e_pod
+from repro.search.encoding import decode
+
+
+def machines():
+    return [
+        tpu_v5e_pod(1, 8),
+        tpu_v5e_pod(2, 4,
+                    type_speeds=(TPU_V5E_PEAK_FLOPS,
+                                 TPU_V5E_PEAK_FLOPS / 2)),
+    ]
+
+
+def bench_pipeline(archs, quick: bool) -> list[dict]:
+    ga_kw = dict(generations=8, pop_size=16) if quick else {}
+    rows = []
+    for arch in archs:
+        n_units = autoplace.unit_costs(ARCHS[arch]).n_units
+        for machine in machines():
+            mk, t_search, plan = {}, {}, None
+            for sched in ("engine", "ga"):
+                t0 = time.perf_counter()
+                # predicted rows: no injectivity repair, so search may
+                # co-locate stages when comm or heterogeneity favors it
+                plan = autoplace.place_pipeline(
+                    ARCHS[arch], machine, scheduler=sched, seed=0,
+                    n_stages=min(n_units, machine.n_cores),
+                    executable=False,
+                    sched_kwargs=ga_kw if sched == "ga" else None)
+                t_search[sched] = time.perf_counter() - t0
+                mk.update(plan.makespans)
+                assert plan.t_autoplaced <= plan.t_heuristic + 1e-12, \
+                    f"autoplaced > heuristic on {arch} x {machine.name}"
+            rng = np.random.default_rng(0)
+            rand = rng.integers(0, machine.n_cores, plan.n_stages,
+                                dtype=np.int32)
+            mk["random"] = decode(plan.graph, machine, rand).makespan()
+            t_auto = min(mk["engine"], mk["ga"], mk["heuristic"])
+            gain = 100.0 * (1.0 - t_auto / mk["heuristic"])
+            rows.append({
+                "arch": arch, "machine": machine.name,
+                "n_stages": plan.n_stages, "n_micro": plan.n_micro,
+                "t_heuristic": mk["heuristic"], "t_engine": mk["engine"],
+                "t_ga": mk["ga"], "t_random": mk["random"],
+                "t_autoplaced": t_auto, "gain_pct": round(gain, 2),
+                "ga_s": round(t_search["ga"], 3)})
+            print(f"{arch:>14} on {machine.name:<22} "
+                  f"S={plan.n_stages:2d}  heur {1e3 * mk['heuristic']:8.3f} "
+                  f"engine {1e3 * mk['engine']:8.3f} ga {1e3 * mk['ga']:8.3f} "
+                  f"rand {1e3 * mk['random']:8.3f} ms ({gain:+5.2f}%)")
+    return rows
+
+
+def bench_moe(quick: bool) -> list[dict]:
+    rows = []
+    cfg = ARCHS["qwen3-moe-235b-a22b"]
+    for n_dev in ((8,) if quick else (8, 16)):
+        rng = np.random.default_rng(1)
+        loads = rng.lognormal(5.0, 1.0, cfg.n_experts).astype(float)
+        ep = autoplace.place_moe_experts(cfg, list(loads), n_devices=n_dev)
+        assert ep.t_autoplaced <= ep.t_roundrobin + 1e-12
+        rows.append({"arch": cfg.name, "n_experts": cfg.n_experts,
+                     "n_devices": n_dev,
+                     "t_roundrobin": ep.t_roundrobin,
+                     "t_autoplaced": ep.t_autoplaced,
+                     "gain_pct": round(ep.gain_pct, 2)})
+        print(f"{cfg.name:>20} E={cfg.n_experts} -> {n_dev:2d} dev  "
+              f"rr {1e6 * ep.t_roundrobin:8.2f} auto "
+              f"{1e6 * ep.t_autoplaced:8.2f} us ({ep.gain_pct:+5.2f}%)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default="BENCH_autoplace.json")
+    args = ap.parse_args()
+
+    archs = ["gemma-2b", "gemma2-2b"] if args.quick else \
+        ["gemma-2b", "gemma2-2b", "mamba2-780m"]
+    print("== pipeline stage placement (autoplaced <= heuristic, "
+          "asserted per row) ==")
+    pipeline = bench_pipeline(archs, args.quick)
+    print("\n== MoE expert placement ==")
+    moe = bench_moe(args.quick)
+
+    out = Path(args.json)
+    history = []
+    if out.exists():
+        try:
+            history = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"quick": args.quick, "pipeline": pipeline, "moe": moe})
+    out.write_text(json.dumps(history, indent=1))
+    print(f"\nwrote pipeline/moe sections -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,14 +31,21 @@ class MachineModel:
     ``locations[c]`` = hierarchical address, e.g. (blade, socket, pair, core).
     ``levels[d]`` = comm level used when two locations first differ at
     depth d (d=0 -> outermost, slowest). Same core -> zero cost.
-    ``type_speeds`` are only documentation; heterogeneity lives in the
-    per-type subtask times of the MPAHA graph."""
+
+    Heterogeneity lives in the per-type subtask times of the MPAHA graph;
+    ``type_speeds`` / ``type_mem_bw`` (per-type peak FLOP/s and local
+    memory bytes/s) exist so cost *extractors* (repro.autoplace) can
+    derive those per-type times from application FLOP/byte profiles.
+    Empty tuples mean "not modelled" — the algorithm layer never reads
+    them."""
 
     name: str
     core_types: list[int]
     locations: list[tuple[int, ...]]
     levels: list[CommLevel]
     n_types: int = 1
+    type_speeds: tuple[float, ...] = ()
+    type_mem_bw: tuple[float, ...] = ()
 
     def __post_init__(self) -> None:
         assert len(self.core_types) == len(self.locations)
@@ -170,17 +177,33 @@ TPU_V5E_ICI_BW = 50e9                # bytes/s per link (intra-pod)
 TPU_V5E_DCI_BW = 6.4e9               # bytes/s per chip (inter-pod, assumed)
 
 
-def tpu_v5e_pod(n_pods: int = 1, chips_per_pod: int = 256) -> MachineModel:
-    """Beyond-paper machine model: chips are 'cores', the memory hierarchy
-    becomes HBM (same chip) ≪ ICI (same pod) ≪ DCI (cross-pod). Location
-    = (pod, chip). Used by repro.core.placement to map layer blocks /
-    experts onto the dry-run meshes."""
-    locations = [(p, c) for p in range(n_pods) for c in range(chips_per_pod)]
-    types = [0] * (n_pods * chips_per_pod)
+def tpu_v5e_pod(n_pods: int = 1, chips_per_pod: int = 256,
+                cores_per_chip: int = 1,
+                type_speeds: tuple[float, ...] = (TPU_V5E_PEAK_FLOPS,)
+                ) -> MachineModel:
+    """Beyond-paper machine model with the full three-tier hierarchy the
+    hardware has — consistent with ``cluster_of_multicores`` (one level
+    per location depth): HBM (same chip) ≪ ICI (same pod) ≪ DCI/DCN
+    (cross-pod). Location = (pod, chip, core); with the default one
+    TensorCore per chip the hbm tier is the same-leaf fallback, with
+    ``cores_per_chip=2`` co-located cores talk through HBM exactly like
+    the paper's shared-L2 core pairs. ``type_speeds`` / ``type_mem_bw``
+    carry the roofline peaks so repro.autoplace can turn FLOP/byte
+    profiles into per-type subtask times. Used by repro.core.placement
+    and repro.autoplace to map layer blocks / pipeline stages / experts
+    onto the dry-run meshes."""
+    locations = [(p, c, k) for p in range(n_pods)
+                 for c in range(chips_per_pod) for k in range(cores_per_chip)]
+    n_types = len(type_speeds)
+    types = [0] * len(locations) if n_types == 1 else \
+        [p % n_types for p, _, _ in locations]     # heterogeneity per pod
     levels = [
         CommLevel("dci", 1e-5, TPU_V5E_DCI_BW),
         CommLevel("ici", 1e-6, TPU_V5E_ICI_BW),
+        CommLevel("hbm", 1e-7, TPU_V5E_HBM_BW),
     ]
     return MachineModel(
-        f"tpu-v5e {n_pods}x{chips_per_pod}", types, locations, levels
+        f"tpu-v5e {n_pods}x{chips_per_pod}", types, locations, levels,
+        type_speeds=type_speeds,
+        type_mem_bw=(TPU_V5E_HBM_BW,) * n_types,
     )

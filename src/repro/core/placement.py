@@ -128,6 +128,11 @@ class StageAssignment:
     layer_to_pod: list[int]
     t_est: float
     schedule: Schedule
+    # filled by runtime.pipeline.plan_stages: the comm-aware per-microbatch
+    # stage tick time and its communication component (0.0 when the caller
+    # didn't model the link)
+    t_stage: float = 0.0
+    comm_time: float = 0.0
 
 
 def layer_graph(layer_flops: list[float], activation_bytes: list[float],

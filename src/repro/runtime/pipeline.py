@@ -33,19 +33,45 @@ from ..jax_compat import pvary, shard_map
 
 
 def plan_stages(n_layers: int, n_pods: int, layer_flops: float,
-                act_bytes: float):
+                act_bytes: float, *, pod_speed_flops: float | None = None,
+                link_bandwidth: float | None = None,
+                link_latency: float = 1e-5):
     """AMTHA stage plan for homogeneous pods. Returns layers-per-stage
-    and the predicted per-microbatch stage time; validates that AMTHA's
-    assignment is (as expected for a single chain on equal pods)
-    contiguous — the executable layout requires equal contiguous stages."""
-    from repro.core.machine import TPU_V5E_PEAK_FLOPS
+    and the assignment; validates that AMTHA's chain mapping is (as
+    expected for a single chain on equal pods) contiguous — the
+    executable layout requires equal contiguous stages.
+
+    The balance objective is comm-aware: the per-microbatch stage tick
+    time ``sa.t_stage`` charges the inter-stage activation hop
+    (``link_latency + act_bytes / link_bandwidth``, the slow inter-pod
+    level by default) on top of the compute term, so the heuristic's
+    predicted pipeline time ``(n_micro + S - 1) * t_stage`` is honest
+    about what each extra stage costs. What this heuristic still cannot
+    see — which *device* each stage lands on, i.e. whether consecutive
+    stages pay an ICI hop or a DCN hop on a hierarchical machine, and
+    co-locating stages when comm dominates — is exactly the gap
+    ``repro.autoplace`` closes by searching the placement.
+    """
+    from repro.core.machine import TPU_V5E_DCI_BW, TPU_V5E_PEAK_FLOPS
     from repro.core.placement import assign_layers_to_pods
     assert n_layers % n_pods == 0, "equal stages required for the layout"
+    speed = pod_speed_flops if pod_speed_flops is not None \
+        else TPU_V5E_PEAK_FLOPS * 256
+    bw = link_bandwidth if link_bandwidth is not None else TPU_V5E_DCI_BW
     sa = assign_layers_to_pods([layer_flops] * n_layers,
                                [act_bytes] * (n_layers - 1),
-                               [TPU_V5E_PEAK_FLOPS * 256] * n_pods)
+                               [speed] * n_pods)
     per = n_layers // n_pods
+    sa.comm_time = (link_latency + act_bytes / bw) if n_pods > 1 else 0.0
+    sa.t_stage = per * layer_flops / speed + sa.comm_time
     return per, sa
+
+
+def predicted_pipeline_time(t_stage: float, n_stages: int,
+                            n_micro: int) -> float:
+    """GPipe fill-drain schedule length for a balanced plan: the pipeline
+    runs ``n_micro + n_stages - 1`` ticks of the bottleneck stage time."""
+    return (n_micro + n_stages - 1) * t_stage
 
 
 def gpipe(stage_fn, stage_params, x_micro, *, pod_axis: str, mesh,
@@ -107,21 +133,26 @@ def restack_for_stages(group_params, n_stages: int):
 
 
 def make_pipelined_forward(cfg, mesh, n_stages: int, pod_axis: str = "pod"):
-    """Pipelined LM forward for uniform-repeat archs (prologue/tail-free):
-    embed (replicated) -> staged blocks over pods -> head. Returns
+    """Pipelined LM forward for repeat-only archs (prologue/tail-free):
+    embed (replicated) -> staged blocks over pods -> head. The repeat
+    unit may hold several layer kinds (gemma2's local/global pair): the
+    stage scans whole units, applying each kind in order, so any
+    ``n_stages`` dividing ``n_rep`` is executable. Returns
     fn(params, tokens (n_micro, B_m, S)) -> logits (n_micro, B_m, S, V)."""
     from repro.models.blocks import layer_forward
     from repro.models.model import ShardCtx, _embed, _head
     prologue, n_rep, unit, tail = cfg.repeat_structure()
-    assert not prologue and not tail and len(unit) == 1, \
-        "pipelined path supports uniform-repeat archs"
+    assert not prologue and not tail and not cfg.shared_attn_every, \
+        "pipelined path supports repeat-only archs"
     ctx = ShardCtx(mode="train", vma_axes=(pod_axis,))
 
     def stage_fn(params_loc, x):
-        def one(x, lp):
-            y, _, _ = layer_forward(unit[0], lp, x, cfg=cfg, ctx=ctx,
-                                    positions=jnp.arange(x.shape[1]))
-            return y, None
+        def one(x, gp):
+            for pos, kind in enumerate(unit):
+                x, _, _ = layer_forward(kind, gp[str(pos)], x, cfg=cfg,
+                                        ctx=ctx,
+                                        positions=jnp.arange(x.shape[1]))
+            return x, None
         y, _ = jax.lax.scan(one, x, params_loc)
         return y
 
@@ -129,7 +160,7 @@ def make_pipelined_forward(cfg, mesh, n_stages: int, pod_axis: str = "pod"):
         n_micro, bm, s = tokens_micro.shape
         emb = jax.vmap(lambda t: _embed(params, {"tokens": t}, cfg)[0]
                        )(tokens_micro)
-        stages = restack_for_stages(params["groups"]["0"], n_stages)
+        stages = restack_for_stages(params["groups"], n_stages)
         y = gpipe(stage_fn, stages, emb, pod_axis=pod_axis, mesh=mesh)
         return jax.vmap(lambda h: _head(params, h, cfg))(y)
 

@@ -25,7 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..jax_compat import abstract_mesh
 
-__all__ = ["MeshAxes", "Partitioner", "abstract_mesh"]
+__all__ = ["MeshAxes", "Partitioner", "abstract_mesh",
+           "permute_expert_params"]
 
 
 @dataclass(frozen=True)
@@ -223,3 +224,41 @@ class Partitioner:
     def named(self, spec_tree):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
                             is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# expert layout application
+# ---------------------------------------------------------------------------
+
+def permute_expert_params(params_tree, permutation):
+    """Apply an expert permutation (e.g. from ``repro.autoplace``) to a
+    parameter tree: every ``moe`` subtree's expert-stacked weights
+    (``wi (E, d, 2, F)``, ``wo (E, F, d)``) are reordered along E and the
+    router's output columns are permuted to match, so routing semantics
+    are unchanged while expert *e* now lives at position
+    ``permutation.index(e)``. Because the expert axis shards contiguously
+    over ``model`` (``param_spec``), this reorder IS the expert->shard
+    layout: experts grouped by device land on that device. Stacked
+    (scan-grouped) moe params keep their leading layer dim untouched."""
+    import jax.numpy as jnp
+    perm = jnp.asarray(list(permutation))
+
+    def reorder(subtree):
+        out = dict(subtree)
+        for k in ("wi", "wo"):
+            w = subtree[k]
+            e_axis = w.ndim - (3 if k == "wi" else 2) - 1  # 0, or 1 if stacked
+            out[k] = jnp.take(w, perm, axis=e_axis)
+        r = subtree["router"]                              # (..., d, E)
+        out["router"] = jnp.take(r, perm, axis=r.ndim - 1)
+        return out
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: reorder(v) if k == "moe" else walk(v)
+                    for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params_tree)

@@ -1,0 +1,279 @@
+"""repro.autoplace: the model stack lowered into the scheduler's IR and
+placed back onto the runtime.
+
+Pins the ISSUE acceptance surface: AppGraph validity for every arch
+(topological, positive costs, schedulable + round-trippable through the
+array lowering), FLOP bookkeeping against ``launch/hlo_analysis``
+ground truth, placement determinism at fixed seed, the
+``autoplaced <= heuristic`` best-of invariant, and the executable
+round-trip of a searched stage assignment into
+``make_pipelined_forward`` (subprocess, 8 host devices). Plus the
+hlo_analysis MoE coverage: gating + expert dots counted identically
+under scan (trip-count-corrected) and unrolled compiles.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import autoplace
+from repro.configs import ARCHS, reduced
+from repro.core.machine import TPU_V5E_PEAK_FLOPS, tpu_v5e_pod
+from repro.core.registry import get_scheduler
+from repro.core.schedule import validate
+from repro.core.sim_engine import simulate_scenario
+from repro.search.encoding import decode
+
+
+def run_sub(code: str):
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH="src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=540)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# graph validity
+# ---------------------------------------------------------------------------
+
+def test_pipeline_graph_valid_for_every_arch():
+    """Every config lowers to a finalized, schedulable AppGraph with
+    positive costs, and the engine schedule survives the full validator
+    AND the array lowering (simulated t_exec == makespan)."""
+    machine = tpu_v5e_pod(1, 8)
+    for name, cfg in sorted(ARCHS.items()):
+        graph, costs = autoplace.model_pipeline_graph(cfg, machine,
+                                                      seq=128, n_micro=3)
+        assert costs.flops > 0 and costs.hbm_bytes > 0 \
+            and costs.act_bytes > 0, name
+        assert all(t > 0 for st in graph.subtasks for t in st.times), name
+        assert all(e.volume > 0 for e in graph.edges), name
+        # edges are topological: chains within tasks, stage s -> s+1 across
+        for e in graph.edges:
+            assert graph.subtasks[e.dst].task_id == \
+                graph.subtasks[e.src].task_id + 1, name
+        sched = get_scheduler("engine")(graph, machine).to_schedule()
+        validate(sched, graph, machine)
+        sim = simulate_scenario(graph, machine, sched, contention=False)
+        np.testing.assert_allclose(sim.t_exec, sched.makespan(), rtol=1e-9)
+
+
+def test_stage_splits_balanced():
+    assert autoplace.stage_splits(13, 8) == [2, 2, 2, 2, 2, 1, 1, 1]
+    assert autoplace.stage_splits(12, 4) == [3, 3, 3, 3]
+    assert autoplace.default_stages(13, 8) == 1      # no divisor <= 8
+    assert autoplace.default_stages(13, 16) == 13
+    assert autoplace.default_stages(48, 8) == 8
+
+
+def test_moe_graph_fan_out_fan_in():
+    cfg = ARCHS["qwen3-moe-235b-a22b"]
+    machine = tpu_v5e_pod(1, 8)
+    loads = [float(10 + i) for i in range(cfg.n_experts)]
+    g = autoplace.moe_graph(cfg, machine, loads)
+    assert len(g.tasks) == cfg.n_experts + 2
+    disp, comb = g.tasks[0][0], g.tasks[cfg.n_experts + 1][0]
+    outs = {e.dst for e in g.edges if e.src == disp}
+    ins = {e.src for e in g.edges if e.dst == comb}
+    experts = {g.tasks[1 + i][0] for i in range(cfg.n_experts)}
+    assert outs == experts and ins == experts
+    validate(get_scheduler("engine")(g, machine).to_schedule(), g, machine)
+
+
+# ---------------------------------------------------------------------------
+# FLOP bookkeeping vs hlo_analysis
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    # global-attention archs agree tightly with the compiled HLO
+    ("gemma-2b", 0.85, 1.15),
+    # the windowed local layers compile to a rolled banded attention with
+    # doubled key length, which the closed form deliberately doesn't
+    # chase — documented loose tolerance
+    ("gemma2-2b", 0.60, 1.20),
+])
+def test_graph_flops_within_tolerance_of_hlo(arch, lo, hi):
+    cfg = ARCHS[arch]
+    machine = tpu_v5e_pod(1, 8)
+    n_micro = 2
+    graph, costs = autoplace.model_pipeline_graph(cfg, machine, seq=1024,
+                                                  n_micro=n_micro)
+    # bookkeeping identity: at seq 1024 the stages are compute-bound, so
+    # inverting the roofline recovers exactly the analytic flops total
+    graph_flops = autoplace.graph_total_flops(graph, machine) / n_micro
+    np.testing.assert_allclose(graph_flops, costs.total_flops, rtol=1e-6)
+    hlo = autoplace.unit_costs(cfg, seq=1024, source="hlo")
+    ratio = graph_flops / hlo.total_flops
+    assert lo < ratio < hi, f"{arch}: analytic/hlo = {ratio:.3f}"
+
+
+def test_hlo_analysis_moe_scan_vs_unrolled():
+    """Satellite coverage for launch/hlo_analysis: a MoE-shaped module
+    (gating dot + expert dots) under a scanned compile must count the
+    same dot FLOPs as the unrolled compile — i.e. the while-body
+    trip-count correction applies to the expert einsums too."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.hlo_analysis import analyze_module
+    from repro.models.blocks import init_layer, layer_forward
+    from repro.models.model import ShardCtx
+
+    cfg = reduced(ARCHS["qwen3-moe-235b-a22b"])
+    kind, n_rep, seq = "moe_global", 4, 32
+    ctx = ShardCtx(mode="train")
+    keys = jax.random.split(jax.random.PRNGKey(0), n_rep)
+    stacked = jax.eval_shape(
+        lambda ks: jax.vmap(lambda k: init_layer(kind, cfg, k))(ks), keys)
+
+    def body(x, lp):
+        y, _, _ = layer_forward(kind, lp, x, cfg=cfg, ctx=ctx,
+                                positions=jnp.arange(x.shape[1]))
+        return y, None
+
+    def scanned(ps, x):
+        return jax.lax.scan(body, x, ps)[0]
+
+    def unrolled(ps, x):
+        for i in range(n_rep):
+            x = body(x, jax.tree.map(lambda t: t[i], ps))[0]
+        return x
+
+    x = jax.ShapeDtypeStruct((1, seq, cfg.d_model), jnp.dtype(cfg.dtype))
+    fs = analyze_module(jax.jit(scanned).lower(stacked, x).compile().as_text())
+    fu = analyze_module(jax.jit(unrolled).lower(stacked, x).compile().as_text())
+    assert fs.dot_flops > 0
+    np.testing.assert_allclose(fs.dot_flops, fu.dot_flops, rtol=0.05)
+    # the gating dot is in there: more flops than the expert FFNs alone
+    # (dense oracle: every expert on every token)
+    expert_only = n_rep * seq * cfg.n_experts * \
+        autoplace.expert_flops_per_token(cfg)
+    assert fs.dot_flops > expert_only
+
+
+# ---------------------------------------------------------------------------
+# placement: determinism + best-of invariant
+# ---------------------------------------------------------------------------
+
+def _het_machine():
+    return tpu_v5e_pod(2, 4, type_speeds=(TPU_V5E_PEAK_FLOPS,
+                                          TPU_V5E_PEAK_FLOPS / 2))
+
+
+def test_placement_deterministic_at_fixed_seed():
+    for sched in ("engine", "ga"):
+        plans = [autoplace.place_pipeline(ARCHS["gemma-2b"], _het_machine(),
+                                          scheduler=sched, seed=3)
+                 for _ in range(2)]
+        assert plans[0].stage_to_device == plans[1].stage_to_device
+        assert plans[0].makespans == plans[1].makespans
+
+
+def test_autoplaced_never_worse_than_heuristic():
+    for arch in ("gemma-2b", "gemma2-2b", "mamba2-780m"):
+        n_units = autoplace.unit_costs(ARCHS[arch]).n_units
+        for machine in (tpu_v5e_pod(1, 8), _het_machine()):
+            for executable in (True, False):
+                plan = autoplace.place_pipeline(
+                    ARCHS[arch], machine, scheduler="engine",
+                    n_stages=min(n_units, machine.n_cores),
+                    executable=executable)
+                assert plan.t_autoplaced <= plan.t_heuristic + 1e-12, \
+                    (arch, machine.name, executable, plan.makespans)
+                if executable:
+                    s2d = plan.stage_to_device
+                    assert len(set(s2d)) == len(s2d)   # injective
+                    assert max(s2d) < machine.n_cores
+
+
+def test_search_beats_contiguous_on_heterogeneous_machine():
+    """The row the bench graphs: on a half-speed second pod, co-locating
+    light stages on fast cores strictly beats contiguous-by-id."""
+    plan = autoplace.place_pipeline(ARCHS["gemma2-2b"], _het_machine(),
+                                    n_stages=8, executable=False)
+    assert plan.t_autoplaced < plan.t_heuristic * 0.999, plan.makespans
+
+
+def test_expert_plan_permutation_and_invariant():
+    cfg = ARCHS["qwen3-moe-235b-a22b"]
+    loads = [float(1 + (7 * i) % 13) for i in range(cfg.n_experts)]
+    ep = autoplace.place_moe_experts(cfg, loads, n_devices=8)
+    e = cfg.n_experts
+    assert sorted(ep.permutation) == list(range(e))
+    assert sorted(ep.expert_to_device) == sorted(i % 8 for i in range(e))
+    assert ep.t_autoplaced <= ep.t_roundrobin + 1e-12
+    # permutation groups experts by device, in device order
+    devs = [ep.expert_to_device[i] for i in ep.permutation]
+    assert devs == sorted(devs)
+    ep2 = autoplace.place_moe_experts(cfg, loads, n_devices=8)
+    assert ep2.expert_to_device == ep.expert_to_device
+
+
+def test_expert_permutation_preserves_logits():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models.model import ShardCtx, forward, init_params
+    from repro.sharding.partition import permute_expert_params
+
+    cfg = reduced(ARCHS["qwen3-moe-235b-a22b"]).replace(dtype="float32")
+    loads = [float(1 + i) for i in range(cfg.n_experts)]
+    ep = autoplace.place_moe_experts(cfg, loads, n_devices=4)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    ref = forward(params, {"tokens": tokens}, cfg, ShardCtx(mode="train"))[0]
+    got = forward(permute_expert_params(params, ep.permutation),
+                  {"tokens": tokens}, cfg, ShardCtx(mode="train"))[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# executable round-trip
+# ---------------------------------------------------------------------------
+
+def test_stage_assignment_round_trips_into_pipelined_forward():
+    """A searched placement, applied via stage_mesh, must produce the
+    same logits as the sequential forward — on gemma2's two-kind repeat
+    unit (the multi-layer-unit pipelined path)."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import autoplace
+        from repro.configs import ARCHS, reduced
+        from repro.core.machine import tpu_v5e_pod
+        from repro.models.model import ShardCtx, forward, init_params
+        from repro.runtime.pipeline import make_pipelined_forward
+
+        cfg = reduced(ARCHS["gemma2-2b"]).replace(dtype="float32",
+                                                  n_layers=8)
+        machine = tpu_v5e_pod(1, len(jax.devices()))
+        plan = autoplace.place_pipeline(cfg, machine, scheduler="engine",
+                                        n_micro=3, seq=16)
+        assert plan.n_stages == 4, plan.n_stages
+        assert len(set(plan.stage_to_device)) == plan.n_stages
+
+        mesh = autoplace.stage_mesh(plan.stage_to_device)
+        fwd = make_pipelined_forward(cfg, mesh, n_stages=plan.n_stages)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        n_micro, bm, s = 3, 2, 16
+        tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                    (n_micro, bm, s), 0, cfg.vocab)
+        with mesh:
+            logits = jax.jit(fwd)(params, tokens)
+        assert logits.shape == (n_micro, bm, s, cfg.vocab), logits.shape
+        ref = jnp.stack([forward(params, {"tokens": tokens[i]}, cfg,
+                                 ShardCtx(mode="train"))[0]
+                         for i in range(n_micro)])
+        err = float(jnp.abs(logits - ref).max())
+        print("roundtrip err:", err)
+        assert err < 2e-3, err
+    """)
+    assert "roundtrip err:" in out
