@@ -1,0 +1,281 @@
+"""Fault-tolerance benchmark: recovery quality, shedding, bounded state.
+
+    PYTHONPATH=src python -m benchmarks.faults_bench [--quick] [--json PATH]
+
+Appends one entry to ``BENCH_faults.json`` (the shared perf-trajectory
+convention). Three sections:
+
+* **recovery** — a streaming workload is admitted, a core dies and a
+  straggler appears mid-run, recovery re-maps the stranded work, and
+  the recovered timeline replays under the full fault script. The
+  yardstick is a *clairvoyant oracle*: the same workload re-admitted
+  from scratch on the degraded submachine (dead cores removed, residual
+  slow/degrade events index-remapped), i.e. a scheduler that knew the
+  failure before t=0. ``gap_pct`` is the recovered makespan's overshoot
+  over that oracle.
+* **shedding** — a 3-tier overloaded workload hits the same fault; the
+  criticality-tiered shed path (drop lowest, unstarted apps first) is
+  compared against a no-shed recovery on the top tier's deadline-miss
+  rate.
+* **compaction** — many tiny apps stream through the admission engine
+  with periodic ``ClusterState.compact()``; live interval count and
+  admission wall time stay flat (O(live work)) while an uncompacted
+  prefix grows linearly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import dell_poweredge_1950
+from repro.core.machine import MachineModel
+from repro.core.synth import SynthParams
+from repro.faults import FaultScript, core_fail, core_slow, link_degrade
+from repro.online import (ArrivalParams, OnlineAMTHA, RecoveryParams,
+                          evaluate, generate_workload, recover_from_script)
+
+MEAN_APP_WORK_S = 20 * 27.5     # E[serial work], small app class
+
+
+def submachine(machine: MachineModel, dead: set[int]) -> tuple[MachineModel, dict[int, int]]:
+    """``machine`` minus ``dead`` cores, plus the old->new index map
+    (locations keep their hierarchy, so comm levels are unchanged)."""
+    keep = [c for c in range(machine.n_cores) if c not in dead]
+    remap = {c: i for i, c in enumerate(keep)}
+    sub = MachineModel(
+        name=f"{machine.name}-deg{len(dead)}",
+        core_types=[machine.core_types[c] for c in keep],
+        locations=[machine.locations[c] for c in keep],
+        levels=list(machine.levels), n_types=machine.n_types)
+    return sub, remap
+
+
+def residual_script(script: FaultScript, remap: dict[int, int]) -> FaultScript:
+    """The script as seen from the submachine: fail events for removed
+    cores vanish, surviving slow/degrade events re-index."""
+    out = []
+    for e in script.events:
+        if e.kind == "core_fail":
+            continue                         # the core is gone entirely
+        if e.kind == "core_slow" and e.core in remap:
+            out.append(core_slow(e.t, remap[e.core], e.factor))
+        elif e.kind == "link_degrade" and e.core in remap \
+                and e.core_b in remap:
+            out.append(link_degrade(e.t, remap[e.core],
+                                    remap[e.core_b], e.factor))
+    return FaultScript(tuple(out))
+
+
+def admit_all(machine, workload, upto=None):
+    eng = OnlineAMTHA(machine)
+    for a in workload:
+        if upto is not None and a.t_arrival > upto:
+            break
+        eng.admit(a)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# section 1: recovered vs clairvoyant re-run
+# ---------------------------------------------------------------------------
+
+def bench_recovery(quick: bool) -> list[dict]:
+    machine = dell_poweredge_1950()
+    rows = []
+    for seed in range(2 if quick else 5):
+        wl = generate_workload(
+            ArrivalParams(rate=0.6 * machine.n_cores / MEAN_APP_WORK_S,
+                          n_types=machine.n_types),
+            n_apps=6 if quick else 14, seed=seed)
+        eng = admit_all(machine, wl)
+        ms = eng.state.schedule.makespan()
+        fail_t = ms * 0.25
+        script = FaultScript((
+            core_fail(fail_t, 1),
+            core_slow(fail_t, 2, 3.0),
+            link_degrade(fail_t, 0, 3, 2.0)))
+        at = ms * 0.35                      # detection lag after the fault
+        t0 = time.perf_counter()
+        rep = recover_from_script(eng, script, at)
+        rec_wall = time.perf_counter() - t0
+        eng.state.validate()
+        met = evaluate(eng.state, faults=script)
+        assert met.n_stranded == 0, "recovery left strandable work"
+
+        sub, remap = submachine(machine, set(rep.dead_cores))
+        oracle = admit_all(sub, wl)
+        omet = evaluate(oracle.state, faults=residual_script(script, remap))
+        gap = (met.span - omet.span) / omet.span * 100.0
+        rows.append({
+            "section": "recovery", "seed": seed, "n_apps": len(wl),
+            "dead_cores": list(rep.dead_cores),
+            "slow_cores": list(rep.slow_cores),
+            "n_rolled_back": rep.n_rolled_back,
+            "n_replaced": rep.n_replaced, "n_lost": rep.n_lost,
+            "n_shed": len(rep.shed_app_ids), "retries": rep.retries,
+            "recover_wall_s": round(rec_wall, 4),
+            "recovered_span": round(met.span, 3),
+            "oracle_span": round(omet.span, 3),
+            "gap_pct": round(gap, 2),
+            "recovered_miss": round(met.deadline_miss_rate, 4),
+            "oracle_miss": round(omet.deadline_miss_rate, 4)})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# section 2: criticality-tiered shedding under overload
+# ---------------------------------------------------------------------------
+
+def shed_point(machine, wl, script, at, shed: bool) -> dict:
+    eng = admit_all(machine, wl)
+    recover_from_script(eng, script, at,
+                        RecoveryParams(shed=shed, max_retries=2))
+    eng.state.validate()
+    met = evaluate(eng.state, faults=script)
+    top = max(met.tier_miss_rate)
+    return {"top_tier_miss": met.tier_miss_rate[top],
+            "tier_miss": {str(k): v for k, v in met.tier_miss_rate.items()},
+            "n_shed": met.n_shed, "n_stranded": met.n_stranded,
+            "span": round(met.span, 3)}
+
+
+def bench_shedding(quick: bool) -> list[dict]:
+    machine = dell_poweredge_1950()
+    rows = []
+    for seed in range(2 if quick else 4):
+        wl = generate_workload(
+            ArrivalParams(rate=1.0 * machine.n_cores / MEAN_APP_WORK_S,
+                          n_types=machine.n_types,
+                          sla_slack=(2.5, 5.0),
+                          criticality_weights=(0.5, 0.3, 0.2)),
+            n_apps=20, seed=100 + seed)
+        probe = admit_all(machine, wl)
+        ms = probe.state.schedule.makespan()
+        # a saturated cluster loses 3 of its 8 cores: capacity for the
+        # full workload is gone and something has to give
+        script = FaultScript(tuple(core_fail(ms * 0.15, c)
+                                   for c in (1, 3, 5)))
+        at = ms * 0.25
+        with_shed = shed_point(machine, wl, script, at, shed=True)
+        no_shed = shed_point(machine, wl, script, at, shed=False)
+        rows.append({
+            "section": "shedding", "seed": seed, "n_apps": len(wl),
+            "shed": with_shed, "no_shed": no_shed,
+            "top_tier_improved": with_shed["top_tier_miss"]
+            < no_shed["top_tier_miss"]})
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# section 3: bounded state over a long arrival stream
+# ---------------------------------------------------------------------------
+
+def stream_tiny(machine, n_apps: int, seed: int, compact_every: int | None,
+                checkpoint_every: int) -> dict:
+    """Admit ``n_apps`` tiny apps; return live-size/wall checkpoints."""
+    # tiny apps: ~4 tasks x 27.5 s mean serial work = 110 s per app;
+    # offered load ~50% so apps retire faster than they arrive and the
+    # live window stays small
+    params = ArrivalParams(
+        rate=0.5 * machine.n_cores / (4 * 27.5),
+        small=SynthParams(n_tasks=(3, 5), subtasks_per_task=(1, 2)),
+        n_types=machine.n_types)
+    wl = generate_workload(params, n_apps=n_apps, seed=seed)
+    eng = OnlineAMTHA(machine)
+    st = eng.state
+    checkpoints = []
+    t_chunk = time.perf_counter()
+    for i, a in enumerate(wl):
+        eng.admit(a)
+        if compact_every and (i + 1) % compact_every == 0:
+            st.compact()
+        if (i + 1) % checkpoint_every == 0:
+            checkpoints.append({
+                "admitted": i + 1,
+                "live_intervals": len(st.schedule.placements),
+                "live_apps": len(st.apps),
+                "next_sid": st._next_sid,
+                "chunk_wall_s": round(time.perf_counter() - t_chunk, 4)})
+            t_chunk = time.perf_counter()
+    return {"n_apps": n_apps, "compact_every": compact_every,
+            "n_retired": st.n_retired,
+            "peak_live": max(c["live_intervals"] for c in checkpoints),
+            "final_live": checkpoints[-1]["live_intervals"],
+            "checkpoints": checkpoints}
+
+
+def bench_compaction(quick: bool) -> list[dict]:
+    machine = dell_poweredge_1950()
+    n = 5_000 if quick else 100_000
+    n_prefix = max(n // 10, 1000)           # uncompacted baseline prefix
+    compacted = stream_tiny(machine, n, seed=7, compact_every=256,
+                            checkpoint_every=max(n // 20, 1))
+    uncompacted = stream_tiny(machine, n_prefix, seed=7, compact_every=None,
+                              checkpoint_every=max(n_prefix // 10, 1))
+    return [{"section": "compaction", "machine": machine.name,
+             "compacted": compacted, "uncompacted_prefix": uncompacted,
+             "flat": compacted["peak_live"]
+             < uncompacted["final_live"] * 2}]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="CI-sized run")
+    ap.add_argument("--json", default="BENCH_faults.json")
+    args = ap.parse_args()
+    quick = args.quick
+
+    print("== recovery vs clairvoyant re-run on the degraded machine ==")
+    rec = bench_recovery(quick)
+    for r in rec:
+        print(f"  seed {r['seed']}: recovered {r['recovered_span']:9.1f}  "
+              f"oracle {r['oracle_span']:9.1f}  gap {r['gap_pct']:+6.2f}%  "
+              f"(rolled {r['n_rolled_back']}, lost {r['n_lost']}, "
+              f"shed {r['n_shed']}, {r['recover_wall_s'] * 1e3:.0f} ms)")
+    worst = max(r["gap_pct"] for r in rec)
+    print(f"  worst gap: {worst:+.2f}%")
+
+    print("\n== criticality-tiered shedding under overload ==")
+    shed = bench_shedding(quick)
+    for r in shed:
+        print(f"  seed {r['seed']}: top-tier miss "
+              f"{r['shed']['top_tier_miss']:.3f} (shed "
+              f"{r['shed']['n_shed']}) vs {r['no_shed']['top_tier_miss']:.3f}"
+              f" no-shed  improved={r['top_tier_improved']}")
+    mean_shed = float(np.mean([r["shed"]["top_tier_miss"] for r in shed]))
+    mean_no = float(np.mean([r["no_shed"]["top_tier_miss"] for r in shed]))
+    print(f"  mean top-tier miss: {mean_shed:.3f} shed vs {mean_no:.3f} "
+          f"no-shed")
+
+    print("\n== bounded state: compaction over a long arrival stream ==")
+    comp = bench_compaction(quick)
+    c = comp[0]
+    print(f"  compacted: {c['compacted']['n_apps']} apps, peak live "
+          f"{c['compacted']['peak_live']} intervals, final "
+          f"{c['compacted']['final_live']}")
+    print(f"  uncompacted prefix: {c['uncompacted_prefix']['n_apps']} apps, "
+          f"final live {c['uncompacted_prefix']['final_live']} intervals")
+
+    rows = rec + shed + comp
+    out = Path(args.json)
+    history = []
+    if out.exists():
+        try:
+            history = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            history = []
+    history.append({"quick": quick, "worst_recovery_gap_pct": worst,
+                    "mean_top_tier_miss_shed": round(mean_shed, 4),
+                    "mean_top_tier_miss_no_shed": round(mean_no, 4),
+                    "rows": rows})
+    out.write_text(json.dumps(history, indent=1))
+    print(f"\nwrote {len(rows)} rows -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -196,12 +196,60 @@ def drain_matrix(graphs: list[AppGraph], machine: MachineModel) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# fault lowering
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultArrays:
+    """A fault script resolved against one machine (``repro.faults``).
+
+    ``fail_t`` is the per-core fail instant (``inf`` = never dies);
+    ``slow`` holds per-core ``(t, factor)`` slowdown steps and
+    ``degrade`` per-unordered-pair ``(t, factor)`` link steps, both in
+    script order — factors compose multiplicatively in that order, so
+    keeping the order is what makes every simulator's float products
+    bit-identical."""
+
+    n_cores: int
+    fail_t: np.ndarray              # (C,) f64, inf = never
+    slow: tuple[tuple[tuple[float, float], ...], ...]       # per core
+    degrade: dict[tuple[int, int], tuple[tuple[float, float], ...]]
+
+    @property
+    def max_slow_events(self) -> int:
+        return max((len(s) for s in self.slow), default=0)
+
+    @property
+    def max_degrade_events(self) -> int:
+        return max((len(d) for d in self.degrade.values()), default=0)
+
+
+def lower_faults(n_cores: int, script) -> FaultArrays | None:
+    """Lower a fault script (anything exposing the ``FaultScript``
+    views: ``validate`` / ``fail_times`` / ``slow_events`` /
+    ``degrade_events``) against a core count. ``None`` and already
+    lowered :class:`FaultArrays` pass through, and an empty script
+    lowers to ``None`` so the fault-free hot paths stay untouched."""
+    if script is None or isinstance(script, FaultArrays):
+        return script
+    script.validate(n_cores)
+    if not script.events:
+        return None
+    return FaultArrays(
+        n_cores=n_cores,
+        fail_t=_frozen(np.asarray(script.fail_times(n_cores), np.float64)),
+        slow=tuple(tuple(s) for s in script.slow_events(n_cores)),
+        degrade={k: tuple(v) for k, v in script.degrade_events().items()},
+    )
+
+
+# ---------------------------------------------------------------------------
 # scenario lowering
 # ---------------------------------------------------------------------------
 
 @dataclass(frozen=True)
 class ScenarioArrays:
-    """One (graph, machine, schedule[, releases]) evaluation scenario."""
+    """One (graph, machine, schedule[, releases[, faults]]) scenario."""
 
     graph: GraphArrays
     machine: MachineArrays
@@ -215,6 +263,7 @@ class ScenarioArrays:
     release_order: np.ndarray       # int32 — sids with a floor, in the
     #   caller's dict-insertion order (release events enter the event
     #   heap in this order; ties in time break by it, like the seed)
+    fault: FaultArrays | None = None        # degraded-run replay, or None
 
     @property
     def n_subtasks(self) -> int:
@@ -243,10 +292,12 @@ class ScenarioArrays:
 
 
 def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
-                   *, releases: dict[int, float] | None = None
-                   ) -> ScenarioArrays:
+                   *, releases: dict[int, float] | None = None,
+                   faults=None) -> ScenarioArrays:
     """Lower one scenario. The schedule must place exactly this graph's
-    subtasks (the merged-graph view of an online timeline qualifies)."""
+    subtasks (the merged-graph view of an online timeline qualifies).
+    ``faults`` — a ``repro.faults`` script (or prelowered
+    :class:`FaultArrays`) replayed during simulation."""
     ga = graph_arrays(graph)
     ma = machine_arrays(machine)
     s_count = ga.n_subtasks
@@ -287,6 +338,7 @@ def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
         order_ptr=_frozen(order_ptr), order_sid=_frozen(order_sid),
         release=_frozen(release),
         release_order=_frozen(np.asarray(release_order, np.int32)),
+        fault=lower_faults(ma.n_cores, faults),
     )
 
 
@@ -314,6 +366,17 @@ class ScenarioBatch:
     wave: np.ndarray                # (B, S)    int32 — topological level
     t_est: np.ndarray               # (B,)      f64 — per-scenario makespan
     depth: int                      # relaxation steps to reach fixpoint
+    # degraded-run replay (None on fault-free batches, keeping the hot
+    # paths untouched): per-subtask views of each scenario's FaultArrays
+    fail_t: np.ndarray | None = None        # (B, S) assigned core's fail, inf
+    slow_t: np.ndarray | None = None        # (B, S, K) slow steps, inf pad
+    slow_f: np.ndarray | None = None        # (B, S, K) factors, 1.0 pad
+    deg_t: np.ndarray | None = None         # (B, S, P, K2) edge steps, inf pad
+    deg_f: np.ndarray | None = None         # (B, S, P, K2) factors, 1.0 pad
+
+    @property
+    def has_faults(self) -> bool:
+        return self.fail_t is not None
 
     @property
     def valid(self) -> np.ndarray:
@@ -402,6 +465,18 @@ def batch_scenarios(scenarios: list[ScenarioArrays]) -> ScenarioBatch:
     wave = np.zeros((b, s_max), np.int32)
     t_est = np.zeros(b)
     depth = 0
+    faulty = [sa.fault for sa in scenarios]
+    has_faults = any(f is not None for f in faulty)
+    k_slow = max((f.max_slow_events for f in faulty if f is not None),
+                 default=0)
+    k_deg = max((f.max_degrade_events for f in faulty if f is not None),
+                default=0)
+    if has_faults:
+        fail_t = np.full((b, s_max), np.inf)
+        slow_t = np.full((b, s_max, k_slow), np.inf)
+        slow_f = np.ones((b, s_max, k_slow))
+        deg_t = np.full((b, s_max, p_max, k_deg), np.inf)
+        deg_f = np.ones((b, s_max, p_max, k_deg))
     for i, sa in enumerate(scenarios):
         n = sa.graph.n_subtasks
         n_sub[i] = n
@@ -428,16 +503,39 @@ def batch_scenarios(scenarios: list[ScenarioArrays]) -> ScenarioBatch:
         pred[i, dst, col] = psid
         pred_lat[i, dst, col] = lag_lat
         pred_volbw[i, dst, col] = lag_volbw
+        if sa.fault is not None:
+            fl = sa.fault
+            fail_t[i, :n] = fl.fail_t[sa.core_of]
+            for sid in range(n):
+                for k, (t, f) in enumerate(fl.slow[sa.core_of[sid]]):
+                    slow_t[i, sid, k] = t
+                    slow_f[i, sid, k] = f
+            if fl.degrade:
+                # degrade applies only to edges that pay comm, like the
+                # event loop's start_transfer (a != b and volume > 0)
+                for e in range(len(psid)):
+                    a, c2 = int(cp[e]), int(cs[e])
+                    if a == c2 or pvol[e] <= 0.0:
+                        continue
+                    steps = fl.degrade.get((min(a, c2), max(a, c2)))
+                    for k, (t, f) in enumerate(steps or ()):
+                        deg_t[i, dst[e], col[e], k] = t
+                        deg_f[i, dst[e], col[e], k] = f
         waves_i = _scenario_waves(sa, prev_i)
         wave[i, :n] = waves_i
         t_est[i] = sa.t_est
         depth = max(depth, max(waves_i) + 1 if waves_i else 0)
+    fault_fields = {} if not has_faults else {
+        "fail_t": _frozen(fail_t), "slow_t": _frozen(slow_t),
+        "slow_f": _frozen(slow_f), "deg_t": _frozen(deg_t),
+        "deg_f": _frozen(deg_f)}
     return ScenarioBatch(
         n_scenarios=b, max_subtasks=s_max, max_preds=p_max,
         n_sub=_frozen(n_sub), duration=_frozen(duration),
         release=_frozen(release), prev=_frozen(prev), pred=_frozen(pred),
         pred_lat=_frozen(pred_lat), pred_volbw=_frozen(pred_volbw),
-        wave=_frozen(wave), t_est=_frozen(t_est), depth=depth)
+        wave=_frozen(wave), t_est=_frozen(t_est), depth=depth,
+        **fault_fields)
 
 
 def lower_population(graph: AppGraph, machine: MachineModel, schedules,
@@ -464,10 +562,13 @@ def repeat_batch(batch: ScenarioBatch, k: int) -> ScenarioBatch:
     the batch construction again."""
     if k <= 1:
         return batch
+    fields = ["n_sub", "duration", "release", "prev", "pred",
+              "pred_lat", "pred_volbw", "wave", "t_est"]
+    if batch.has_faults:
+        fields += ["fail_t", "slow_t", "slow_f", "deg_t", "deg_f"]
     rep = {f: _frozen(np.tile(getattr(batch, f),
                               (k,) + (1,) * (getattr(batch, f).ndim - 1)))
-           for f in ("n_sub", "duration", "release", "prev", "pred",
-                     "pred_lat", "pred_volbw", "wave", "t_est")}
+           for f in fields}
     return ScenarioBatch(
         n_scenarios=batch.n_scenarios * k,
         max_subtasks=batch.max_subtasks, max_preds=batch.max_preds,

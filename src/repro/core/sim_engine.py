@@ -81,6 +81,16 @@ def _scenario_views(sa: ScenarioArrays) -> tuple:
     return v
 
 
+def _fault_views(fa) -> tuple:
+    """Python-list fail times (slow/degrade are already plain tuples),
+    cached on the frozen FaultArrays."""
+    v = fa.__dict__.get("_py_views")
+    if v is None:
+        v = (fa.fail_t.tolist(), fa.slow, fa.degrade)
+        object.__setattr__(fa, "_py_views", v)
+    return v
+
+
 def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
                     jitter: float = 0.0, seed: int = 0) -> SimResult:
     """Execute one lowered scenario exactly like the seed ``simulate``.
@@ -88,7 +98,9 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
     Release floors come from ``sa.release`` (the lowering folds the
     seed's ``releases`` dict into the IR); they enter the event heap in
     the dict's insertion order (``sa.release_order``), so same-instant
-    release ties break exactly like the seed's."""
+    release ties break exactly like the seed's. ``sa.fault`` replays a
+    fault script with the seed simulator's exact semantics (same
+    expressions, same order — bit-identical degraded runs)."""
     rng = np.random.default_rng(seed)
     n_cores = sa.machine.n_cores
     n_sub = sa.graph.n_subtasks
@@ -96,6 +108,9 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
     lat_rows, bw_rows, pair_rows, inst_lat, inst_bw = _machine_views(sa.machine)
     exec_rows, core_of, succs, pred_count, order, releases, release_order = \
         _scenario_views(sa)
+    fa = sa.fault
+    fail_t, slow_ev, degrade_ev = \
+        _fault_views(fa) if fa is not None else (None, None, None)
 
     core_order = order                          # read-only in the loop
     core_pos = [0] * n_cores
@@ -114,6 +129,12 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
 
     def exec_time(sid: int, core: int) -> float:
         base = exec_rows[sid][core]
+        if slow_ev is not None:
+            # slowdown sampled at the start instant, factors composed
+            # in script order (the bit-identity contract of the script)
+            for t_ev, f_ev in slow_ev[core]:
+                if now >= t_ev:
+                    base *= f_ev
         if jitter > 0.0:
             base *= float(np.exp(rng.normal(0.0, jitter)))
         return base
@@ -122,6 +143,8 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
         nonlocal seq
         if core_pos[core] >= len(core_order[core]):
             return
+        if fail_t is not None and now >= fail_t[core]:
+            return                          # dead core: strand the rest
         sid = core_order[core][core_pos[core]]
         if arrivals_pending[sid] > 0 or core_busy_until[core] > now + 1e-15:
             return
@@ -142,14 +165,24 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
         if a == b or vol <= 0.0:
             arrive(dst)
             return
+        # link degradation sampled at the transfer's start; multiplying
+        # by the neutral 1.0 is exact, so fault-free runs are unchanged
+        lp = 1.0
+        if degrade_ev:
+            steps = degrade_ev.get((a, b) if a < b else (b, a))
+            if steps:
+                for t_ev, f_ev in steps:
+                    if now >= t_ev:
+                        lp *= f_ev
         if not contention:
             heapq.heappush(events,
-                           (now + lat_rows[a][b] + vol / bw_rows[a][b],
+                           (now + lat_rows[a][b] * lp
+                            + vol / bw_rows[a][b] * lp,
                             seq, "arrive", dst))
             seq += 1
             return
         inst = pair_rows[a][b]
-        transfers[next_tid] = [vol, inst, dst, inst_lat[inst]]
+        transfers[next_tid] = [vol * lp, inst, dst, inst_lat[inst] * lp]
         inst_count[inst] += 1
         next_tid += 1
 
@@ -199,10 +232,16 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
             now = t_next
             if kind == "done":
                 sid = payload
+                core = core_of[sid]
+                if fail_t is not None and now > fail_t[core]:
+                    # the core died while this subtask was in flight:
+                    # the result is lost — no completion, no transfers,
+                    # and the dead core starts nothing else
+                    continue
                 done[sid] = now
                 for succ, vol in succs[sid]:
                     start_transfer(sid, succ, vol)
-                try_start(core_of[sid])
+                try_start(core)
             else:
                 arrive(payload)
         for core in range(n_cores):
@@ -211,18 +250,28 @@ def simulate_arrays(sa: ScenarioArrays, *, contention: bool = True,
 
     if len(done) != n_sub:
         missing = set(range(n_sub)) - set(done)
-        raise RuntimeError(f"simulation deadlock; unfinished: {missing}")
+        if fa is None:
+            raise RuntimeError(f"simulation deadlock; unfinished: {missing}")
+        # faults legitimately strand work (dead core, or downstream of
+        # one); makespan is over finished subtasks, stranded get inf
+        stranded = tuple(sorted(missing))
+        for s in stranded:
+            done[s] = float("inf")
+        return SimResult(max((done[s] for s in done if s not in missing),
+                             default=0.0), done, stranded)
     return SimResult(max(done.values(), default=0.0), done)
 
 
 def simulate_scenario(graph: AppGraph, machine: MachineModel, schedule,
                       contention: bool = True, jitter: float = 0.0,
                       seed: int = 0,
-                      releases: dict[int, float] | None = None) -> SimResult:
+                      releases: dict[int, float] | None = None,
+                      faults=None) -> SimResult:
     """Signature-compatible drop-in for the seed ``simulate``: lower the
     scenario, run the array event loop. Registered as the ``"arrays"``
     simulator."""
-    sa = lower_scenario(graph, machine, schedule, releases=releases)
+    sa = lower_scenario(graph, machine, schedule, releases=releases,
+                        faults=faults)
     return simulate_arrays(sa, contention=contention, jitter=jitter,
                            seed=seed)
 
@@ -335,6 +384,72 @@ def relax_wave_np(batch: ScenarioBatch,
     return np.array(end.reshape(b, s + 1)[:, :s])
 
 
+def relax_wave_faults(batch: ScenarioBatch,
+                      duration: np.ndarray | None = None) -> np.ndarray:
+    """Wave-scheduled evaluation of a fault-carrying batch: the
+    analytic (``contention=False``) fault semantics of the event
+    simulators, vectorized. Per subtask, at its ready instant ``r``:
+
+    * each incoming edge's lag is ``lat*lp + volbw*lp`` with ``lp`` the
+      product of degrade factors triggered at the *producer's finish*
+      (the transfer start — same sampling instant as the event loops);
+    * the duration is scaled by ``sp``, the product of slow factors
+      triggered at ``r`` (the subtask's start);
+    * a finish past the core's fail instant is killed: its end becomes
+      ``inf``, which propagates to every consumer through the max.
+
+    Stranded subtasks therefore come back ``inf``, matching
+    ``SimResult.subtask_end`` under faults. Fault-free scenarios inside
+    a faulty batch take the same expressions with all-neutral factors
+    (``x * 1.0`` is exact), so they match :func:`relax_wave_np`."""
+    b, s = batch.n_scenarios, batch.max_subtasks
+    dur = (batch.duration if duration is None else duration).reshape(-1)
+    order, bounds, idx, lag, rel, target = _wave_plan(batch)
+    dur = dur[order]
+    p1 = idx.shape[1]                           # P + 1 gather columns
+    k2 = batch.deg_t.shape[3]
+    # split lags back out of the prefolded form: the degrade factor
+    # multiplies latency and vol/bw separately (like the event loops);
+    # the in-order core edge (last column) is comm-free -> neutral pad
+    e_lat = np.concatenate(
+        [batch.pred_lat,
+         np.where(batch.prev[:, :, None] < s, 0.0, -np.inf)],
+        axis=2).reshape(b * s, p1)[order]
+    e_volbw = np.concatenate(
+        [batch.pred_volbw,
+         np.where(batch.prev[:, :, None] < s, 0.0, -np.inf)],
+        axis=2).reshape(b * s, p1)[order]
+    deg_t = np.concatenate(
+        [batch.deg_t, np.full((b, s, 1, k2), np.inf)],
+        axis=2).reshape(b * s, p1, k2)[order]
+    deg_f = np.concatenate(
+        [batch.deg_f, np.ones((b, s, 1, k2))],
+        axis=2).reshape(b * s, p1, k2)[order]
+    slow_t = batch.slow_t.reshape(b * s, -1)[order]
+    slow_f = batch.slow_f.reshape(b * s, -1)[order]
+    fail = batch.fail_t.reshape(-1)[order]
+    end = np.zeros(b * (s + 1))
+    for w in range(len(bounds) - 1):
+        lo, hi = bounds[w], bounds[w + 1]
+        if lo == hi:
+            continue
+        g = end[idx[lo:hi]]                     # producer finish times
+        lp = np.where(g[:, :, None] >= deg_t[lo:hi],
+                      deg_f[lo:hi], 1.0).prod(axis=2)
+        lagged = g + (e_lat[lo:hi] * lp + e_volbw[lo:hi] * lp)
+        r = lagged.max(axis=1)
+        np.maximum(r, rel[lo:hi], out=r)
+        np.maximum(r, 0.0, out=r)              # idle-core floor
+        sp = np.where(r[:, None] >= slow_t[lo:hi],
+                      slow_f[lo:hi], 1.0).prod(axis=1)
+        e = r + dur[lo:hi] * sp
+        # completes iff end <= fail instant; a start at/after it can
+        # never finish by it (dur > 0), so one cutoff covers both the
+        # in-flight kill and the dead-core start guard
+        end[target[lo:hi]] = np.where(e > fail[lo:hi], np.inf, e)
+    return np.array(end.reshape(b, s + 1)[:, :s])
+
+
 @dataclass(frozen=True)
 class BatchSimResult:
     """Whole-suite simulation outcome (analytic semantics + jitter)."""
@@ -385,7 +500,11 @@ def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
     if not isinstance(batch, ScenarioBatch):
         batch = batch_scenarios(batch)
     dur = _jitter_durations(batch, jitter, seeds)
-    if backend == "pallas":
+    if batch.has_faults:
+        # the fault semantics live only in the NumPy wave path; the
+        # pallas kernel sweeps plain max-plus and would miss the kills
+        end = relax_wave_faults(batch, dur)
+    elif backend == "pallas":
         try:
             end = _relax_pallas(batch, dur)
         except ImportError:                     # pragma: no cover - no JAX
@@ -396,7 +515,10 @@ def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
         raise ValueError(f"unknown backend {backend!r} "
                          "(have 'numpy', 'pallas')")
     masked = np.where(batch.valid, end, 0.0)
-    t_exec = masked.max(axis=1, initial=0.0)
+    # stranded subtasks (faults) carry inf ends: the makespan is over
+    # the work that finished, like SimResult under faults
+    t_exec = np.where(np.isfinite(masked), masked, 0.0).max(axis=1,
+                                                            initial=0.0)
     return BatchSimResult(t_exec=t_exec, subtask_end=masked,
                           t_est=batch.t_est, n_sub=batch.n_sub)
 
@@ -412,19 +534,26 @@ def _relax_pallas(batch: ScenarioBatch, duration: np.ndarray) -> np.ndarray:
 def simulate_suite(graphs: list[AppGraph], machines, schedules, *,
                    jitter: float = 0.0, seeds=None,
                    releases: list[dict[int, float] | None] | None = None,
+                   faults=None,
                    backend: str = "numpy") -> BatchSimResult:
     """Convenience wrapper: lower ``(graph, machine, schedule)`` triples
     and evaluate them in one batched call. ``machines`` may be a single
-    machine (shared by every scenario) or one per graph."""
+    machine (shared by every scenario) or one per graph; ``faults`` a
+    single fault script (shared) or one per graph (``None`` entries =
+    healthy)."""
     if isinstance(machines, MachineModel):
         machines = [machines] * len(graphs)
     rel = releases if releases is not None else [None] * len(graphs)
-    if not (len(graphs) == len(machines) == len(schedules) == len(rel)):
+    if faults is None or not isinstance(faults, (list, tuple)):
+        faults = [faults] * len(graphs)
+    if not (len(graphs) == len(machines) == len(schedules) == len(rel)
+            == len(faults)):
         raise ValueError(
             f"scenario parts disagree: {len(graphs)} graphs, "
             f"{len(machines)} machines, {len(schedules)} schedules, "
-            f"{len(rel)} release maps")
-    scenarios = [lower_scenario(g, m, s, releases=r)
-                 for g, m, s, r in zip(graphs, machines, schedules, rel)]
+            f"{len(rel)} release maps, {len(faults)} fault scripts")
+    scenarios = [lower_scenario(g, m, s, releases=r, faults=f)
+                 for g, m, s, r, f in zip(graphs, machines, schedules,
+                                          rel, faults)]
     return simulate_batch(scenarios, jitter=jitter, seeds=seeds,
                           backend=backend)

@@ -37,6 +37,9 @@ from .schedule import Schedule
 class SimResult:
     t_exec: float
     subtask_end: dict[int, float]
+    # sids that never completed because a fault stranded them (their
+    # subtask_end entries are inf); empty on healthy runs
+    stranded: tuple[int, ...] = ()
 
     def dif_rel(self, t_est: float) -> float:
         """Paper Eq. (4): %Dif_rel = (T_exec - T_est)/T_exec * 100.
@@ -52,15 +55,31 @@ class SimResult:
 def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
              contention: bool = True, jitter: float = 0.0,
              seed: int = 0,
-             releases: dict[int, float] | None = None) -> SimResult:
+             releases: dict[int, float] | None = None,
+             faults=None) -> SimResult:
     """``releases`` is the event-driven injection hook for the online
     subsystem: ``releases[sid] = t`` holds subtask ``sid`` back until
     simulated time ``t`` (an application arriving mid-simulation is just
     its subtasks carrying ``t = arrival``). Release events enter the same
     event heap as everything else, so cores that idle past an injection
-    instant pick the new work up in order."""
+    instant pick the new work up in order.
+
+    ``faults`` — a ``repro.faults`` script (or prelowered
+    :class:`~repro.core.lowering.FaultArrays`) replayed during the run:
+    a failed core strands everything that has not finished by the fail
+    instant (in-flight work is killed), a slowed core scales durations
+    by the factor in effect at each subtask's start, and a degraded
+    link scales latency and inverse bandwidth at each transfer's start.
+    Stranded subtasks come back with ``inf`` end times instead of a
+    deadlock error."""
+    from .lowering import lower_faults
+
     graph.finalize()
     rng = np.random.default_rng(seed)
+    fa = lower_faults(machine.n_cores, faults)
+    fail_t = fa.fail_t.tolist() if fa is not None else None
+    slow_ev = fa.slow if fa is not None else None
+    degrade_ev = fa.degrade if fa is not None else None
 
     core_order = [schedule.order_on_core(c) for c in range(machine.n_cores)]
     core_pos = [0] * machine.n_cores            # next index into core_order
@@ -81,6 +100,12 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
 
     def exec_time(sid: int, core: int) -> float:
         base = graph.subtasks[sid].time_on(machine.core_types[core])
+        if slow_ev is not None:
+            # slowdown sampled at the start instant, factors composed
+            # in script order (the bit-identity contract of the script)
+            for t_ev, f_ev in slow_ev[core]:
+                if now >= t_ev:
+                    base *= f_ev
         if jitter > 0.0:
             base *= float(np.exp(rng.normal(0.0, jitter)))
         return base
@@ -90,6 +115,8 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
         nonlocal seq
         if core_pos[core] >= len(core_order[core]):
             return
+        if fail_t is not None and now >= fail_t[core]:
+            return                          # dead core: strand the rest
         sid = core_order[core][core_pos[core]]
         if arrivals_pending[sid] > 0 or core_busy_until[core] > now + 1e-15:
             return
@@ -111,20 +138,32 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
         if a == b or vol <= 0.0:
             arrive(dst)
             return
+        # link degradation sampled at the transfer's start; multiplying
+        # by the neutral 1.0 is exact, so fault-free runs are unchanged
+        lp = 1.0
+        if degrade_ev:
+            steps = degrade_ev.get((a, b) if a < b else (b, a))
+            if steps:
+                for t_ev, f_ev in steps:
+                    if now >= t_ev:
+                        lp *= f_ev
         lvl_idx = machine.level_index(a, b)
         lvl = machine.levels[lvl_idx]
         if not contention:
             # analytic: fixed latency + vol/bw, no sharing
             nonlocal seq
             heapq.heappush(events,
-                           (now + lvl.latency + vol / lvl.bandwidth,
+                           (now + lvl.latency * lp
+                            + vol / lvl.bandwidth * lp,
                             seq, "arrive", dst))
             seq += 1
             return
         inst = (lvl_idx, machine.locations[a][:lvl_idx],
                 machine.locations[b][:lvl_idx])
-        # latency is serialized into the fluid phase as extra 'distance'
-        transfers[next_tid] = [vol, inst, dst, lvl.latency]
+        # latency is serialized into the fluid phase as extra 'distance';
+        # a degraded link carries lp x the latency and lp x the volume
+        # (volume inflation == bandwidth division, fixed at start)
+        transfers[next_tid] = [vol * lp, inst, dst, lvl.latency * lp]
         per_instance.setdefault(inst, set()).add(next_tid)
         next_tid += 1
 
@@ -178,10 +217,16 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
             now = t_next
             if kind == "done":
                 sid = payload
+                core = schedule.core_of(sid)
+                if fail_t is not None and now > fail_t[core]:
+                    # the core died while this subtask was in flight:
+                    # the result is lost — no completion, no transfers,
+                    # and the dead core starts nothing else
+                    continue
                 done[sid] = now
                 for succ, vol in graph.succs[sid]:
                     start_transfer(sid, succ, vol)
-                try_start(schedule.core_of(sid))
+                try_start(core)
             else:   # analytic arrival
                 arrive(payload)
         # a core may have become free exactly when data arrived earlier
@@ -191,5 +236,13 @@ def simulate(graph: AppGraph, machine: MachineModel, schedule: Schedule,
 
     if len(done) != graph.n_subtasks:
         missing = set(range(graph.n_subtasks)) - set(done)
-        raise RuntimeError(f"simulation deadlock; unfinished: {missing}")
+        if fa is None:
+            raise RuntimeError(f"simulation deadlock; unfinished: {missing}")
+        # faults legitimately strand work (dead core, or downstream of
+        # one); makespan is over finished subtasks, stranded get inf
+        stranded = tuple(sorted(missing))
+        for s in stranded:
+            done[s] = float("inf")
+        return SimResult(max((done[s] for s in done if s not in missing),
+                             default=0.0), done, stranded)
     return SimResult(max(done.values(), default=0.0), done)

@@ -49,8 +49,10 @@ class Timeline:
         self._ends: list[list[float]] = [[] for _ in range(n_cores)]
         self._sids: list[list[int]] = [[] for _ in range(n_cores)]
         self._avail: list[float] = [0.0] * n_cores
-        # stack of op lists; each op = (sid, core, index, prev_avail)
-        self._journal: list[list[tuple[int, int, int, float]]] = []
+        # stack of op lists; each op is tagged:
+        #   ("add", sid, core, index, prev_avail)            — place
+        #   ("del", sid, core, index, start, end, prev_avail) — remove
+        self._journal: list[list[tuple]] = []
 
     # ---- mutation ------------------------------------------------------
     def place(self, sid: int, core: int, start: float, end: float) -> None:
@@ -65,7 +67,30 @@ class Timeline:
         if end > prev:
             self._avail[core] = end
         if self._journal:
-            self._journal[-1].append((sid, core, idx, prev))
+            self._journal[-1].append(("add", sid, core, idx, prev))
+
+    def remove(self, sid: int) -> Placement:
+        """Unplace ``sid`` (the recovery rollback primitive). Journaled
+        like ``place``, so a transaction that removes intervals and
+        re-places them elsewhere rewinds cleanly on ``rollback``."""
+        p = self.placements.pop(sid)
+        starts = self._starts[p.core]
+        sids = self._sids[p.core]
+        idx = bisect_right(starts, p.start) - 1
+        while sids[idx] != sid:        # zero-length ties share a start
+            idx -= 1
+        del starts[idx]
+        del self._ends[p.core][idx]
+        del sids[idx]
+        prev = self._avail[p.core]
+        ends = self._ends[p.core]
+        # ends are monotone per core (no overlap), so the frontier is
+        # the last end of what remains
+        self._avail[p.core] = ends[-1] if ends else 0.0
+        if self._journal:
+            self._journal[-1].append(("del", sid, p.core, idx,
+                                      p.start, p.end, prev))
+        return p
 
     def extend_sorted(self, items) -> None:
         """Bulk place: append every ``(sid, core, start, end)`` and sort
@@ -113,17 +138,56 @@ class Timeline:
 
     def rollback(self) -> None:
         """Undo the innermost transaction in O(ops made). Ops are undone
-        LIFO, so each journaled insertion index is exact at undo time."""
-        for sid, core, idx, prev_avail in reversed(self._journal.pop()):
-            del self._starts[core][idx]
-            del self._ends[core][idx]
-            del self._sids[core][idx]
-            del self.placements[sid]
+        LIFO, so each journaled index is exact at undo time."""
+        for op in reversed(self._journal.pop()):
+            if op[0] == "add":
+                _, sid, core, idx, prev_avail = op
+                del self._starts[core][idx]
+                del self._ends[core][idx]
+                del self._sids[core][idx]
+                del self.placements[sid]
+            else:                               # "del": re-insert
+                _, sid, core, idx, start, end, prev_avail = op
+                self._starts[core].insert(idx, start)
+                self._ends[core].insert(idx, end)
+                self._sids[core].insert(idx, sid)
+                self.placements[sid] = Placement(sid, core, start, end)
             self._avail[core] = prev_avail
 
     @property
     def in_transaction(self) -> bool:
         return bool(self._journal)
+
+    # ---- horizon compaction -------------------------------------------
+    def compact(self, retire, remap=None) -> dict[int, Placement]:
+        """Drop every placement in ``retire`` and rename the survivors
+        through ``remap`` (old sid -> new sid; identity where absent) —
+        the bounded-state primitive: one filtered rebuild per core, so
+        a long-running timeline stays O(live work). ``_avail`` keeps the
+        true frontier (a core *was* busy until its retired work ended,
+        and retirement must not open slots in the past). Not allowed in
+        a transaction (journaled indices would dangle). Returns the
+        retired placements (for the caller's utilization accounting)."""
+        assert not self._journal, "compact inside a transaction"
+        retire = set(retire)
+        remap = remap or {}
+        retired: dict[int, Placement] = {}
+        for c in range(self.n_cores):
+            keep = [(s, e, sid) for s, e, sid
+                    in zip(self._starts[c], self._ends[c], self._sids[c])
+                    if sid not in retire]
+            self._starts[c] = [s for s, _, _ in keep]
+            self._ends[c] = [e for _, e, _ in keep]
+            self._sids[c] = [remap.get(sid, sid) for _, _, sid in keep]
+        placements: dict[int, Placement] = {}
+        for sid, p in self.placements.items():
+            if sid in retire:
+                retired[sid] = p
+            else:
+                nsid = remap.get(sid, sid)
+                placements[nsid] = Placement(nsid, p.core, p.start, p.end)
+        self.placements = placements
+        return retired
 
     # ---- gap search ----------------------------------------------------
     def earliest_slot(self, core: int, ready: float, duration: float) -> float:
@@ -202,9 +266,11 @@ class Timeline:
                 for c in range(self.n_cores)]
 
     def makespan(self) -> float:
-        if not self.placements:
-            return 0.0
-        return max(self._avail)
+        # max frontier, not max placement end: after horizon compaction
+        # the placements may be gone while the cores were still busy up
+        # to the watermark — the frontier is the honest answer (and it
+        # is 0.0 on a genuinely fresh timeline)
+        return max(self._avail, default=0.0)
 
     def core_of(self, sid: int) -> int:
         return self.placements[sid].core

@@ -36,13 +36,19 @@ from ..core.synth import SynthParams, generate_app
 
 @dataclass(frozen=True)
 class AppArrival:
-    """One application hitting the cluster at ``t_arrival``."""
+    """One application hitting the cluster at ``t_arrival``.
+
+    ``criticality`` is the SLO tier (higher = more critical): under
+    overload or after a fault, recovery sheds tier-0 apps first and
+    metrics report per-tier p99/miss columns, the mixed-criticality
+    regime of arXiv:1403.8020."""
 
     app_id: int
     t_arrival: float
     graph: AppGraph
     deadline: float                 # absolute (model seconds)
     size_class: str                 # "small" | "large"
+    criticality: int = 0            # SLO tier, higher = more critical
 
     @property
     def slack(self) -> float:
@@ -60,10 +66,18 @@ class ArrivalParams:
     large: SynthParams = field(default_factory=lambda: SynthParams(n_tasks=(120, 200)))
     sla_slack: tuple[float, float] = (2.0, 6.0)
     n_types: int = 1
+    # P(tier k) for k = 0..len-1 (higher tier = more critical); the
+    # default keeps every app tier 0, i.e. the pre-tier behaviour
+    criticality_weights: tuple[float, ...] = (1.0,)
 
     def __post_init__(self) -> None:
         if self.process not in ("poisson", "bursty"):
             raise ValueError(f"unknown arrival process {self.process!r}")
+        if not self.criticality_weights or \
+                any(w < 0 for w in self.criticality_weights) or \
+                sum(self.criticality_weights) <= 0:
+            raise ValueError("criticality_weights must be non-negative "
+                             "and sum > 0")
         # replace, don't mutate: caller-supplied SynthParams stay theirs
         self.small = dataclasses.replace(self.small, n_types=self.n_types)
         self.large = dataclasses.replace(self.large, n_types=self.n_types)
@@ -99,6 +113,8 @@ def generate_workload(params: ArrivalParams, n_apps: int,
     """A deterministic stream of ``n_apps`` arrivals, sorted by time."""
     rng = np.random.default_rng(seed)
     times = _arrival_times(params, n_apps, rng)
+    w = np.asarray(params.criticality_weights, dtype=float)
+    w = w / w.sum()
     out: list[AppArrival] = []
     for i, t in enumerate(times):
         big = bool(rng.uniform() < params.p_large)
@@ -110,5 +126,9 @@ def generate_workload(params: ArrivalParams, n_apps: int,
         lb = chain_lower_bound(g)
         out.append(AppArrival(app_id=i, t_arrival=t, graph=g,
                               deadline=t + slack * lb,
-                              size_class="large" if big else "small"))
+                              size_class="large" if big else "small",
+                              # guard keeps the single-tier rng stream
+                              # identical to the pre-tier generator
+                              criticality=(int(rng.choice(len(w), p=w))
+                                           if len(w) > 1 else 0)))
     return out

@@ -113,56 +113,64 @@ class OnlineAMTHA:
         return admitted
 
     def _can_refine(self) -> bool:
-        """Refinement re-places everything, so it needs a still-unstarted
-        timeline (the flag path skips silently once work is running)."""
+        """Refinement pins already-started work (``start < now`` —
+        including history a recovery just rolled back around) and
+        re-places the rest, so it applies whenever at least one
+        placement is still in the future."""
         cur = self.state.schedule
-        return bool(cur.placements) and \
-            min(p.start for p in cur.placements.values()) >= \
-            self.state.now - 1e-9
+        return any(p.start >= self.state.now - 1e-9
+                   for p in cur.placements.values())
 
     # ------------------------------------------------------------------
     def refine_ga(self, *, seed: int = 0, params=None) -> tuple[float, float]:
-        """Re-map the whole admitted workload with the GA mapping search
+        """Re-map the admitted workload with the GA mapping search
         (``repro.search``), the current timeline riding as the elite
         individual, and swap the cluster timeline for the evolved one
         when it is strictly better. Returns ``(old, new)`` makespans.
 
-        This is a *planning* pass: it re-places every admitted subtask,
-        so it only applies while nothing has started running — i.e. the
-        cluster clock still precedes the earliest placed start (batch
-        admission, or admission at the current instant with queued-only
-        work). Outside that window it raises rather than rewrite
-        history. Release floors are preserved: every subtask of an app
-        keeps the app's admission floor ``max(t_admit, t_arrival)``,
-        exactly the ``release_time`` its incremental-AMTHA admission
-        used, so a refined timeline is valid under the same arrival
-        semantics."""
+        Work that has already started (``start < now``) is *frozen*:
+        its placements are pinned verbatim into every candidate and
+        only the future is searched — which is what lets fault recovery
+        reuse this mid-flight, right after rolling back the unstarted
+        intervals of a dead core. With nothing started this degenerates
+        to the original whole-timeline planning pass. Release floors
+        are preserved: every free subtask keeps its app's admission
+        floor ``max(t_admit, t_arrival)`` (raised to ``now`` when
+        history is frozen, so nothing re-plans into the past)."""
         st = self.state
         cur = st.schedule
         if not st.apps or not cur.placements:
             return 0.0, 0.0
-        earliest = min(p.start for p in cur.placements.values())
-        if earliest < st.now - 1e-9:
-            raise RuntimeError(
-                "GA refinement re-places every subtask; the timeline "
-                f"already has work started before now={st.now}")
+        frozen = {sid: p for sid, p in cur.placements.items()
+                  if p.start < st.now - 1e-9}
+        if len(frozen) == len(cur.placements):
+            old = cur.makespan()
+            return old, old                 # nothing left to re-place
         from ..search.encoding import decode, encode
         from ..search.ga import GAParams, ga_search
         merged = st.merged_graph()
         rel: dict[int, float] = {}
         for a in st.apps:
             floor = max(a.t_admit, a.arrival.t_arrival)
+            if frozen:
+                floor = max(floor, st.now)
             for s in a.global_sids():
-                rel[s] = floor
+                if s not in frozen:     # history carries its own times
+                    rel[s] = floor
         par = params or GAParams(pop_size=16, generations=10,
                                  refine_rounds=2, refine_moves=32)
+        elite = encode(merged, cur, strict=False)
         vec, _ = ga_search(merged, self.machine, seed=seed, params=par,
-                           elites=[encode(merged, cur)], releases=rel)
-        cand = decode(merged, self.machine, vec, releases=rel)
+                           elites=[elite], releases=rel,
+                           frozen=frozen or None)
+        cand = decode(merged, self.machine, vec, releases=rel,
+                      frozen=frozen or None)
         old = cur.makespan()
         if cand.makespan() >= old - 1e-12:
             return old, old
         st.schedule = cand
+        if frozen:
+            st.task_coherent = False        # pinned history may split tasks
         for a in st.apps:
             a.t_est_finish = max(cand.placements[s].end
                                  for s in a.global_sids())

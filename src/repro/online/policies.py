@@ -154,7 +154,29 @@ class BatchedPolicy(Policy):
         return [float(v) - now for v in matrix.min(axis=1)]
 
 
-POLICIES = {p.name: p for p in (FIFOPolicy, RankPriorityPolicy, BatchedPolicy)}
+class CriticalityPolicy(Policy):
+    """Admit highest criticality tier first within each batch of ``k``
+    arrivals (heaviest rank breaking ties within a tier), so critical
+    apps grab the timeline's holes before best-effort work walls them
+    off — the admission-side complement of recovery's shed-low-first."""
+
+    name = "critical"
+
+    def __init__(self, k: int = 4, validate_each: bool = False,
+                 use_engine: bool = True):
+        super().__init__(validate_each, use_engine)
+        self.k = k
+
+    def batch_size(self) -> int:
+        return self.k
+
+    def order_batch(self, batch, eng, now):
+        return sorted(batch, key=lambda a: (-a.criticality,
+                                            -app_rank(a, eng.machine)))
+
+
+POLICIES = {p.name: p for p in (FIFOPolicy, RankPriorityPolicy,
+                                BatchedPolicy, CriticalityPolicy)}
 
 
 def make_policy(name: str, k: int = 4, validate_each: bool = False,
@@ -166,4 +188,6 @@ def make_policy(name: str, k: int = 4, validate_each: bool = False,
     if name == "batched":
         return BatchedPolicy(k, validate_each, scorer=scorer,
                              use_engine=use_engine)
+    if name == "critical":
+        return CriticalityPolicy(k, validate_each, use_engine)
     raise ValueError(f"unknown policy {name!r} (have {sorted(POLICIES)})")

@@ -51,6 +51,17 @@ class AdmittedApp:
                      self.sid_offset + self.arrival.graph.n_subtasks)
 
 
+@dataclass(frozen=True)
+class ShedApp:
+    """Summary of an app dropped by recovery (placements removed)."""
+
+    app_id: int
+    criticality: int
+    t_arrival: float
+    deadline: float
+    t_shed: float
+
+
 class ClusterState:
     """The residual-capacity view AMTHA warm-starts against."""
 
@@ -61,6 +72,15 @@ class ClusterState:
         self.apps: list[AdmittedApp] = []
         self.now = 0.0
         self._next_sid = 0
+        # recovery may split a task across cores (partial completion);
+        # validate() relaxes coherence once that has happened
+        self.task_coherent = True
+        # ---- bounded-state bookkeeping (compact / shed) ----
+        self.retired_busy = [0.0] * machine.n_cores   # per-core, pre-compaction
+        self.n_retired = 0
+        self.retired_by_tier: dict[int, int] = {}
+        self.retired_est_miss_by_tier: dict[int, int] = {}
+        self.shed: list[ShedApp] = []
 
     # ---- clock ---------------------------------------------------------
     def advance_to(self, t: float) -> None:
@@ -81,13 +101,17 @@ class ClusterState:
         return self.schedule.gaps(core, horizon=horizon, after=self.now)
 
     def utilization(self, horizon: float | None = None) -> float:
-        """Busy fraction of the machine over [0, horizon]."""
+        """Busy fraction of the machine over [0, horizon]. Retired
+        (compacted-away) intervals still count: they all ended at or
+        before the compaction watermark, so their busy time lies fully
+        inside any ``horizon >= watermark`` a caller would use."""
         h = horizon if horizon is not None else self.schedule.makespan()
         if h <= 0.0:
             return 0.0
-        busy = sum(min(e, h) - min(s, h)
-                   for slots in self.schedule.core_slots
-                   for s, e, _ in slots)
+        busy = sum(self.retired_busy)
+        busy += sum(min(e, h) - min(s, h)
+                    for slots in self.schedule.core_slots
+                    for s, e, _ in slots)
         return busy / (h * self.machine.n_cores)
 
     # ---- admission bookkeeping ----------------------------------------
@@ -120,6 +144,81 @@ class ClusterState:
     def n_admitted(self) -> int:
         return len(self.apps)
 
+    # ---- bounded state: compaction + shedding -------------------------
+    def _rebase(self) -> None:
+        """Re-pack the sid namespace to admission order after apps left
+        the live set (retired or shed), so ``merged_graph`` and the
+        timeline agree again and ``_next_sid`` stays O(live work)."""
+        remap: dict[int, int] = {}
+        off = 0
+        for a in self.apps:
+            n = a.arrival.graph.n_subtasks
+            if a.sid_offset != off:
+                for s in range(n):
+                    remap[a.sid_offset + s] = off + s
+            a.sid_offset = off
+            off += n
+        if remap:
+            self.schedule.compact((), remap)
+        self._next_sid = off
+
+    def compact(self, upto: float | None = None) -> int:
+        """Retire every app whose *entire* timeline footprint ends at or
+        before ``upto`` (default: ``now``; never past ``now``) — whole
+        apps only, so the merged-graph/namespace invariant survives.
+        Their intervals leave the Timeline (memory and ``earliest_slot``
+        cost drop to O(live work)); their busy time and outcome tier
+        move into aggregate counters that ``utilization()`` and the
+        metrics still see. Returns the number of apps retired."""
+        tl = self.schedule
+        assert not tl.in_transaction, "compact inside a transaction"
+        watermark = self.now if upto is None else min(upto, self.now)
+        keep: list[AdmittedApp] = []
+        retire_sids: set[int] = set()
+        for a in self.apps:
+            sids = list(a.global_sids())
+            if all(tl.placements[s].end <= watermark + 1e-9 for s in sids):
+                retire_sids.update(sids)
+                tier = a.arrival.criticality
+                self.n_retired += 1
+                self.retired_by_tier[tier] = \
+                    self.retired_by_tier.get(tier, 0) + 1
+                if not a.est_meets_deadline:
+                    self.retired_est_miss_by_tier[tier] = \
+                        self.retired_est_miss_by_tier.get(tier, 0) + 1
+            else:
+                keep.append(a)
+        n_retired = len(self.apps) - len(keep)
+        if n_retired == 0:
+            return 0
+        for p in tl.compact(retire_sids).values():
+            self.retired_busy[p.core] += p.end - p.start
+        self.apps = keep
+        self._rebase()
+        return n_retired
+
+    def drop_apps(self, app_ids, t: float | None = None) -> None:
+        """Forget shed apps — their placements must already be off the
+        timeline (recovery removed them inside its transaction) — and
+        re-pack the sid namespace. Keeps a :class:`ShedApp` record per
+        drop so metrics can score sheds as misses."""
+        app_ids = set(app_ids)
+        t = self.now if t is None else t
+        keep: list[AdmittedApp] = []
+        for a in self.apps:
+            if a.app_id in app_ids:
+                for s in a.global_sids():
+                    assert s not in self.schedule.placements, \
+                        f"shed app {a.app_id} still has sid {s} placed"
+                self.shed.append(ShedApp(
+                    app_id=a.app_id, criticality=a.arrival.criticality,
+                    t_arrival=a.arrival.t_arrival,
+                    deadline=a.arrival.deadline, t_shed=t))
+            else:
+                keep.append(a)
+        self.apps = keep
+        self._rebase()
+
     # ---- whole-cluster views ------------------------------------------
     def merged_graph(self) -> AppGraph:
         """All admitted apps as one MPAHA graph, sid-aligned with the
@@ -143,10 +242,14 @@ class ClusterState:
 
     def validate(self) -> None:
         """Every offline invariant, on the multiprogrammed timeline —
-        plus online causality: nothing starts before its app arrived."""
+        plus online causality: nothing starts before its app arrived.
+        Correct after compaction (the merged graph and the timeline
+        shrink together) and after recovery (``task_coherent`` goes
+        False once a partially-executed task was re-mapped split)."""
         if not self.apps:
             return
-        validate(self.schedule, self.merged_graph(), self.machine)
+        validate(self.schedule, self.merged_graph(), self.machine,
+                 require_task_coherence=self.task_coherent)
         for a in self.apps:
             for s in a.global_sids():
                 if self.schedule.placements[s].start < a.arrival.t_arrival - 1e-9:

@@ -71,27 +71,44 @@ def _decode_views(graph: AppGraph, machine: MachineModel):
     return cached[1], cached[2], cached[3]
 
 
-def encode(graph: AppGraph, schedule) -> np.ndarray:
-    """Task-coherent schedule -> ``(n_tasks,)`` core vector."""
+def encode(graph: AppGraph, schedule, strict: bool = True) -> np.ndarray:
+    """Task-coherent schedule -> ``(n_tasks,)`` core vector.
+
+    ``strict=False`` tolerates split tasks (a recovered timeline where a
+    partially-executed task was re-mapped): the gene is the core holding
+    the most of the task's subtasks (ties to the lowest core id) — the
+    lossy-but-usable elite seed for mid-flight refinement."""
     out = np.empty(len(graph.tasks), np.int32)
     for k, t in enumerate(task_ids(graph)):
-        cores = {schedule.placements[s].core for s in graph.tasks[t]}
-        if len(cores) != 1:
-            raise ValueError(f"task {t} split across cores {cores}; "
-                             "only task-coherent schedules encode")
-        out[k] = cores.pop()
+        cores = [schedule.placements[s].core for s in graph.tasks[t]]
+        uniq = set(cores)
+        if len(uniq) > 1:
+            if strict:
+                raise ValueError(f"task {t} split across cores {uniq}; "
+                                 "only task-coherent schedules encode")
+            out[k] = max(sorted(uniq), key=cores.count)
+        else:
+            out[k] = uniq.pop()
     return out
 
 
 def decode(graph: AppGraph, machine: MachineModel, assign,
-           *, releases: dict[int, float] | None = None) -> Timeline:
+           *, releases: dict[int, float] | None = None,
+           frozen: dict | None = None) -> Timeline:
     """Core vector -> schedule, via topological list placement.
 
     Each subtask starts at the earliest free gap on its task's core at
     or after ``max(release floor, pred end + lat + vol/bw over every
     predecessor)`` — the same readiness expression the validator and
     the analytic simulator use (same-core matrix entries are ``(0,
-    inf)`` so co-located edges contribute an exact ``0.0``)."""
+    inf)`` so co-located edges contribute an exact ``0.0``).
+
+    ``frozen`` — ``sid -> Placement`` of immutable history (work already
+    started or finished when a mid-flight refinement runs): those
+    intervals are pre-placed verbatim, genes only steer the remaining
+    subtasks, and frozen predecessors feed readiness like any other.
+    With frozen subtasks present the result is generally *not*
+    task-coherent (validate with ``require_task_coherence=False``)."""
     assign = np.asarray(assign, np.int32)
     tids = task_ids(graph)
     if len(assign) != len(tids):
@@ -105,8 +122,13 @@ def decode(graph: AppGraph, machine: MachineModel, assign,
     subtasks = graph.subtasks
 
     sch = Timeline(machine.n_cores)
+    if frozen:
+        sch.extend_sorted((sid, p.core, p.start, p.end)
+                          for sid, p in frozen.items())
     placements = sch.placements
     for sid in topo_order(graph):
+        if frozen and sid in placements:
+            continue
         core = core_of_task[subtasks[sid].task_id]
         ready = releases.get(sid, 0.0) if releases else 0.0
         for pred, vol in graph.preds[sid]:
@@ -122,7 +144,7 @@ def decode(graph: AppGraph, machine: MachineModel, assign,
 
 
 def decode_population(graph: AppGraph, machine: MachineModel, population,
-                      *, releases: dict[int, float] | None = None
-                      ) -> list[Timeline]:
-    return [decode(graph, machine, a, releases=releases)
+                      *, releases: dict[int, float] | None = None,
+                      frozen: dict | None = None) -> list[Timeline]:
+    return [decode(graph, machine, a, releases=releases, frozen=frozen)
             for a in population]

@@ -66,11 +66,14 @@ class GAParams:
 
 def population_fitness(graph: AppGraph, machine: MachineModel, population,
                        *, releases: dict[int, float] | None = None,
+                       frozen: dict | None = None,
                        backend: str = "numpy") -> np.ndarray:
     """(B,) as-executed makespan per chromosome — decode all, lower to
-    one batch, simulate once. The GA's only objective call."""
+    one batch, simulate once. The GA's only objective call. ``frozen``
+    pins immutable history into every decoded candidate (mid-flight
+    refinement; see :func:`~repro.search.encoding.decode`)."""
     schedules = decode_population(graph, machine, population,
-                                  releases=releases)
+                                  releases=releases, frozen=frozen)
     batch = lowering.lower_population(graph, machine, schedules,
                                       releases=releases)
     return simulate_batch(batch, backend=backend).t_exec
@@ -94,13 +97,16 @@ def _tournament(fitness: np.ndarray, rng: np.random.Generator,
 def ga_search(graph: AppGraph, machine: MachineModel, *, seed: int = 0,
               params: GAParams | None = None,
               elites: list[np.ndarray] | None = None,
-              releases: dict[int, float] | None = None
+              releases: dict[int, float] | None = None,
+              frozen: dict | None = None
               ) -> tuple[np.ndarray, float]:
     """Evolve mapping vectors; returns ``(best_vector, best_fitness)``.
 
     ``elites`` seed the initial population (deduplicated, truncated to
     ``pop_size``); pass the encoded heuristic placement(s) here. The
-    whole run is deterministic under ``seed``."""
+    whole run is deterministic under ``seed``. ``frozen`` pins already
+    started/finished placements into every candidate (recovery's
+    mid-flight re-mapping)."""
     par = params or GAParams()
     graph.finalize()
     n_tasks = len(graph.tasks)
@@ -115,7 +121,7 @@ def ga_search(graph: AppGraph, machine: MachineModel, *, seed: int = 0,
 
     def evaluate(p):
         return population_fitness(graph, machine, p, releases=releases,
-                                  backend=par.backend)
+                                  frozen=frozen, backend=par.backend)
 
     fit = evaluate(pop)
     for _ in range(par.generations):
@@ -141,7 +147,8 @@ def ga_search(graph: AppGraph, machine: MachineModel, *, seed: int = 0,
         vec, val = hill_climb(graph, machine, vec, val, rng=rng,
                               rounds=par.refine_rounds,
                               moves=par.refine_moves,
-                              releases=releases, backend=par.backend)
+                              releases=releases, frozen=frozen,
+                              backend=par.backend)
     return vec, val
 
 

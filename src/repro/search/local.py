@@ -41,16 +41,18 @@ def hill_climb(graph: AppGraph, machine: MachineModel, vec: np.ndarray,
                fit: float, *, rng: np.random.Generator, rounds: int = 3,
                moves: int = 48,
                releases: dict[int, float] | None = None,
+               frozen: dict | None = None,
                backend: str = "numpy") -> tuple[np.ndarray, float]:
     """Refine ``vec`` (current fitness ``fit``); returns the improved
-    ``(vector, fitness)``. Deterministic given ``rng``'s state."""
+    ``(vector, fitness)``. Deterministic given ``rng``'s state.
+    ``frozen`` pins immutable history into every candidate."""
     n_cores = machine.n_cores
     if n_cores < 2 or len(vec) == 0:
         return vec, fit
     for _ in range(rounds):
         neigh = _neighbors(vec, rng, moves, n_cores)
         schedules = decode_population(graph, machine, neigh,
-                                      releases=releases)
+                                      releases=releases, frozen=frozen)
         batch = lowering.lower_population(graph, machine, schedules,
                                           releases=releases)
         f = simulate_batch(batch, backend=backend).t_exec
