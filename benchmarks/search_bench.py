@@ -2,15 +2,23 @@
 
     PYTHONPATH=src python -m benchmarks.search_bench [--quick] [--json PATH]
 
-Two sections, appended to ``BENCH_search.json`` (one entry per run, the
-same perf-trajectory convention as the other benches):
+Three sections, appended to ``BENCH_search.json`` (one entry per run,
+the same perf-trajectory convention as the other benches):
 
 * **quality** — per scenario of the §5.1 synthetic suite: makespans of
   ``amtha``/``engine`` (identical by construction), ``heft``/``etf``
   and ``ga``, plus the GA's improvement over the engine heuristic. The
   elite-seeding invariant (GA <= engine on *every* scenario) is
-  asserted row by row while it times.
-* **fitness** — the reason the GA is affordable: scoring one
+  asserted row by row while it times. Full runs add 64-core and
+  256-core cluster-of-multicores rows (1k+-subtask graphs) on the
+  device-resident GA (``GAParams(device=True)``).
+* **phases** — the per-generation cost model: the host path broken down
+  into its four phases (decode every chromosome on a Timeline, lower to
+  a ScenarioBatch, simulate, select/crossover/mutate) vs ONE jitted
+  device generation step (``repro.search.device.generation_step``,
+  warm jit cache). Reports generations/sec for both and the speedup —
+  the full 8-core row asserts the device step is >= 5x the host path.
+* **fitness** — the reason the host GA was affordable: scoring one
   population of B decoded candidates as a per-candidate
   ``simulate_scenario`` loop vs ONE ``lower_population`` +
   ``simulate_batch`` call (both analytic semantics, equivalence-gated
@@ -27,10 +35,12 @@ from pathlib import Path
 
 import numpy as np
 
-from repro.core import (SynthParams, dell_poweredge_1950, generate_app,
-                        get_scheduler, hp_bl260c, lower_population,
-                        simulate_batch, simulate_scenario, validate)
-from repro.search import GAParams, decode_population, ga_schedule
+from repro.core import (SynthParams, cluster_of_multicores,
+                        dell_poweredge_1950, generate_app, get_scheduler,
+                        hp_bl260c, lower_population, simulate_batch,
+                        simulate_scenario, validate)
+from repro.search import (GAParams, decode_population, device_inputs,
+                          ga_schedule, population_fitness_device)
 
 
 # ---------------------------------------------------------------------------
@@ -63,6 +73,75 @@ def bench_quality(name: str, machine, params: SynthParams, n_apps: int,
     mean_gain = float(np.mean([r["ga_gain_pct"] for r in rows]))
     print(f"{name:>8} mean GA gain over engine: {mean_gain:+.2f}%")
     return rows
+
+
+# ---------------------------------------------------------------------------
+def bench_phases(name: str, machine, params: SynthParams, pop_size: int,
+                 seed: int, *, gens: int = 5,
+                 min_speedup: float | None = None) -> dict:
+    """Host per-generation phase breakdown vs one jitted device step."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.search.device import generation_step
+    from repro.search.ga import next_generation
+
+    app = generate_app(params, seed)
+    rng = np.random.default_rng(seed)
+    n_tasks = len(app.tasks)
+    pop = rng.integers(0, machine.n_cores, (pop_size, n_tasks),
+                       dtype=np.int32)
+    p_mut = max(1.0 / max(n_tasks, 1), 0.02)
+    par = GAParams(pop_size=pop_size)
+
+    t0 = time.perf_counter()
+    schedules = decode_population(app, machine, pop)
+    decode_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    batch = lower_population(app, machine, schedules)
+    lower_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    fit = simulate_batch(batch).t_exec
+    fitness_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    next_generation(pop, fit, rng, par, p_mut=p_mut,
+                    n_cores=machine.n_cores)
+    select_s = time.perf_counter() - t0
+    host_gen_s = decode_s + lower_s + fitness_s + select_s
+
+    inp = device_inputs(app, machine)
+    dpop = jnp.asarray(pop)
+    dfit = population_fitness_device(inp, dpop)
+    step = generation_step(par, n_tasks=n_tasks, n_cores=machine.n_cores)
+    key = jax.random.PRNGKey(seed)
+    step(inp, key, dpop, dfit)[1].block_until_ready()      # jit warm-up
+    t0 = time.perf_counter()
+    p, f = dpop, dfit
+    for i in range(gens):
+        key, kg = jax.random.split(key)
+        p, f = step(inp, kg, p, f)
+    f.block_until_ready()
+    device_gen_s = (time.perf_counter() - t0) / gens
+
+    row = {"suite": name, "pop": pop_size, "tasks": n_tasks,
+           "subtasks": app.n_subtasks,
+           "decode_s": round(decode_s, 4), "lower_s": round(lower_s, 4),
+           "fitness_s": round(fitness_s, 4), "select_s": round(select_s, 4),
+           "host_gen_s": round(host_gen_s, 4),
+           "device_gen_s": round(device_gen_s, 5),
+           "host_gens_per_s": round(1.0 / host_gen_s, 2),
+           "device_gens_per_s": round(1.0 / device_gen_s, 2),
+           "speedup": round(host_gen_s / device_gen_s, 2)}
+    print(f"{name:>10} pop={pop_size:4d} host "
+          f"{1e3 * host_gen_s:8.1f} ms/gen (decode {1e3 * decode_s:.1f} + "
+          f"lower {1e3 * lower_s:.1f} + fitness {1e3 * fitness_s:.1f} + "
+          f"select {1e3 * select_s:.1f})  device "
+          f"{1e3 * device_gen_s:7.2f} ms/gen -> {row['speedup']:6.1f}x")
+    if min_speedup is not None:
+        assert row["speedup"] >= min_speedup, \
+            f"device generation only {row['speedup']}x host on {name} " \
+            f"(need >= {min_speedup}x)"
+    return row
 
 
 # ---------------------------------------------------------------------------
@@ -111,9 +190,12 @@ def main() -> None:
     args = ap.parse_args()
 
     p8 = SynthParams(n_tasks=(15, 25))
+    p64 = SynthParams(n_tasks=(120, 200))
+    p256 = SynthParams(n_tasks=(240, 280))         # 1k+-subtask graphs
     m8 = dell_poweredge_1950()
     ga_par = GAParams(pop_size=16, generations=10, refine_rounds=2,
-                      refine_moves=24) if args.quick else GAParams()
+                      refine_moves=24, device=args.quick) \
+        if args.quick else GAParams()
 
     print("== GA vs heuristics (elite-seeded: GA <= engine, asserted) ==")
     quality = bench_quality("8core", m8, p8,
@@ -121,17 +203,40 @@ def main() -> None:
                             ga_params=ga_par)
     if not args.quick:
         quality += bench_quality(
-            "64core", hp_bl260c(), SynthParams(n_tasks=(120, 200)),
-            n_apps=2, seed=100,
+            "8core-dev", m8, p8, n_apps=10, seed=0,
+            ga_params=GAParams(device=True))
+        quality += bench_quality(
+            "64core", hp_bl260c(), p64, n_apps=2, seed=100,
             ga_params=GAParams(pop_size=16, generations=8, refine_rounds=2,
                                refine_moves=32))
+        quality += bench_quality(
+            "64core-dev", hp_bl260c(), p64, n_apps=2, seed=100,
+            ga_params=GAParams(pop_size=64, generations=16, refine_rounds=2,
+                               refine_moves=64, device=True))
+        quality += bench_quality(
+            "256core-dev", cluster_of_multicores(32), p256, n_apps=2,
+            seed=300,
+            ga_params=GAParams(pop_size=64, generations=12, refine_rounds=1,
+                               refine_moves=64, device=True))
+
+    print("\n== per-generation phases: host decode/lower/fitness/select "
+          "vs one jitted device step ==")
+    if args.quick:
+        phases = [bench_phases("8core", m8, p8, pop_size=32, seed=0,
+                               gens=3)]
+    else:
+        phases = [bench_phases("8core", m8, p8, pop_size=256, seed=0,
+                               min_speedup=5.0),
+                  bench_phases("64core", hp_bl260c(), p64, pop_size=256,
+                               seed=100),
+                  bench_phases("256core", cluster_of_multicores(32), p256,
+                               pop_size=256, seed=300)]
 
     print("\n== batched fitness vs per-candidate simulate_scenario loop ==")
     fitness = [bench_fitness("8core", m8, p8,
                              pop_size=32 if args.quick else 64, seed=0)]
     if not args.quick:
-        fitness.append(bench_fitness("64core", hp_bl260c(),
-                                     SynthParams(n_tasks=(120, 200)),
+        fitness.append(bench_fitness("64core", hp_bl260c(), p64,
                                      pop_size=32, seed=100))
 
     out = Path(args.json)
@@ -142,9 +247,9 @@ def main() -> None:
         except json.JSONDecodeError:
             history = []
     history.append({"quick": args.quick, "quality": quality,
-                    "fitness": fitness})
+                    "phases": phases, "fitness": fitness})
     out.write_text(json.dumps(history, indent=1))
-    print(f"\nwrote quality/fitness sections -> {out}")
+    print(f"\nwrote quality/phases/fitness sections -> {out}")
 
 
 if __name__ == "__main__":

@@ -13,10 +13,11 @@ from .amtha import AMTHA, amtha_schedule
 from .engine import ArrayAMTHA, engine_schedule
 from .executor import ExecResult, execute_threaded
 from .heft import etf_schedule, heft_schedule
-from .lowering import (GraphArrays, MachineArrays, ScenarioArrays,
-                       ScenarioBatch, batch_scenarios, drain_matrix,
-                       graph_arrays, lower_population, lower_scenario,
-                       machine_arrays, repeat_batch)
+from .lowering import (GraphArrays, MachineArrays, PopulationArrays,
+                       ScenarioArrays, ScenarioBatch, batch_scenarios,
+                       drain_matrix, graph_arrays, lower_population,
+                       lower_scenario, machine_arrays, population_arrays,
+                       repeat_batch)
 from .machine import (MachineModel, cluster_of_multicores,
                       dell_poweredge_1950, heterogeneous_cluster, hp_bl260c,
                       tpu_v5e_pod)
@@ -45,10 +46,12 @@ __all__ = [
     "paper_suite_8core", "paper_suite_64core", "place_experts",
     "round_robin_placement", "assign_layers_to_pods",
     # scenario IR + array/batched simulation
-    "GraphArrays", "MachineArrays", "ScenarioArrays", "ScenarioBatch",
+    "GraphArrays", "MachineArrays", "PopulationArrays", "ScenarioArrays",
+    "ScenarioBatch",
     "batch_scenarios", "drain_matrix", "graph_arrays", "lower_population",
     "lower_scenario",
-    "machine_arrays", "repeat_batch", "BatchSimResult", "simulate_arrays",
+    "machine_arrays", "population_arrays", "repeat_batch",
+    "BatchSimResult", "simulate_arrays",
     "simulate_batch",
     "simulate_scenario", "simulate_suite",
     # scheduler/simulator registry

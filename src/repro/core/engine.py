@@ -27,6 +27,7 @@ diverge.
 
 from __future__ import annotations
 
+import warnings
 from heapq import heappop, heappush
 
 import numpy as np
@@ -44,9 +45,12 @@ def comm_matrices(machine: MachineModel) -> tuple[np.ndarray, np.ndarray]:
 
     The engine used to own this lowering; it now lives in the shared
     scenario IR (one source of truth for the comm matrices the engine,
-    the kernels and the simulator all gather from). Kept as a thin
-    wrapper so existing callers keep working — import from
-    ``repro.core.lowering`` in new code."""
+    the kernels and the simulator all gather from). Emits a
+    ``DeprecationWarning`` — import from ``repro.core.lowering``."""
+    warnings.warn(
+        "repro.core.engine.comm_matrices is deprecated; use "
+        "repro.core.lowering.comm_matrices",
+        DeprecationWarning, stacklevel=2)
     return lowering.comm_matrices(machine)
 
 

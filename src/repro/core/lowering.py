@@ -178,11 +178,22 @@ def graph_arrays(graph: AppGraph) -> GraphArrays:
     return ga
 
 
+def _exec_core(ga: GraphArrays, ma: MachineArrays) -> np.ndarray:
+    """(S, C) exec times gathered through ``core_types``, cached on the
+    frozen GraphArrays keyed by the machine's MachineArrays identity —
+    every scenario of one (graph, machine) pair (a whole GA population,
+    every generation) shares one gather instead of paying O(S·C) each."""
+    cached = ga.__dict__.get("_exec_core")
+    if cached is None or cached[0] is not ma:
+        cached = (ma, _frozen(ga.exec_type[:, ma.core_types]))
+        object.__setattr__(ga, "_exec_core", cached)
+    return cached[1]
+
+
 def exec_matrix(graph: AppGraph, machine: MachineModel) -> np.ndarray:
     """(S, C) exec times gathered through ``core_types`` — the §3.3
     chain-walk input of the array engine."""
-    ga = graph_arrays(graph)
-    return ga.exec_type[:, machine_arrays(machine).core_types]
+    return _exec_core(graph_arrays(graph), machine_arrays(machine))
 
 
 def drain_matrix(graphs: list[AppGraph], machine: MachineModel) -> np.ndarray:
@@ -291,15 +302,31 @@ class ScenarioArrays:
         return prev
 
 
-def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
-                   *, releases: dict[int, float] | None = None,
-                   faults=None) -> ScenarioArrays:
-    """Lower one scenario. The schedule must place exactly this graph's
-    subtasks (the merged-graph view of an online timeline qualifies).
-    ``faults`` — a ``repro.faults`` script (or prelowered
-    :class:`FaultArrays`) replayed during simulation."""
-    ga = graph_arrays(graph)
-    ma = machine_arrays(machine)
+def _release_arrays(s_count: int, releases: dict[int, float] | None
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(release floors, release insertion order) — shared by every
+    candidate of a population (one releases dict applies to all)."""
+    release = np.zeros(s_count)
+    release_order: list[int] = []
+    if releases:
+        for sid, t in releases.items():
+            if not 0 <= sid < s_count:
+                raise ValueError(
+                    f"release for unknown subtask {sid} "
+                    f"(graph has {s_count}); sid namespaces drifted?")
+            release[sid] = float(t)
+            release_order.append(sid)
+    return _frozen(release), _frozen(np.asarray(release_order, np.int32))
+
+
+def _placement_scenario(ga: GraphArrays, ma: MachineArrays,
+                        exec_core: np.ndarray, schedule,
+                        release: np.ndarray, release_order: np.ndarray,
+                        fault: FaultArrays | None) -> ScenarioArrays:
+    """The per-candidate tail of :func:`lower_scenario`: only the
+    placement-dependent arrays (core assignment, intervals, per-core
+    order) are built here — everything shared across a population
+    (graph/machine arrays, exec gather, release floors) rides in."""
     s_count = ga.n_subtasks
     if len(schedule.placements) != s_count or \
             (s_count and set(schedule.placements) != set(range(s_count))):
@@ -321,25 +348,27 @@ def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
         order_ptr[c + 1] = order_ptr[c] + len(row)
         order_sid[k:k + len(row)] = row
         k += len(row)
-    release = np.zeros(s_count)
-    release_order: list[int] = []
-    if releases:
-        for sid, t in releases.items():
-            if not 0 <= sid < s_count:
-                raise ValueError(
-                    f"release for unknown subtask {sid} "
-                    f"(graph has {s_count}); sid namespaces drifted?")
-            release[sid] = float(t)
-            release_order.append(sid)
     return ScenarioArrays(
-        graph=ga, machine=ma,
-        exec_core=_frozen(ga.exec_type[:, ma.core_types]),
+        graph=ga, machine=ma, exec_core=exec_core,
         core_of=_frozen(core_of), start=_frozen(start), end=_frozen(end),
         order_ptr=_frozen(order_ptr), order_sid=_frozen(order_sid),
-        release=_frozen(release),
-        release_order=_frozen(np.asarray(release_order, np.int32)),
-        fault=lower_faults(ma.n_cores, faults),
+        release=release, release_order=release_order, fault=fault,
     )
+
+
+def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
+                   *, releases: dict[int, float] | None = None,
+                   faults=None) -> ScenarioArrays:
+    """Lower one scenario. The schedule must place exactly this graph's
+    subtasks (the merged-graph view of an online timeline qualifies).
+    ``faults`` — a ``repro.faults`` script (or prelowered
+    :class:`FaultArrays`) replayed during simulation."""
+    ga = graph_arrays(graph)
+    ma = machine_arrays(machine)
+    release, release_order = _release_arrays(ga.n_subtasks, releases)
+    return _placement_scenario(ga, ma, _exec_core(ga, ma), schedule,
+                               release, release_order,
+                               lower_faults(ma.n_cores, faults))
 
 
 # ---------------------------------------------------------------------------
@@ -551,7 +580,12 @@ def lower_population(graph: AppGraph, machine: MachineModel, schedules,
     arrays (core assignment, intervals, core order) differ per
     candidate. ``releases`` (one shared map, e.g. online admission
     floors) applies to every candidate."""
-    scenarios = [lower_scenario(graph, machine, s, releases=releases)
+    ga = graph_arrays(graph)
+    ma = machine_arrays(machine)
+    exec_core = _exec_core(ga, ma)
+    release, release_order = _release_arrays(ga.n_subtasks, releases)
+    scenarios = [_placement_scenario(ga, ma, exec_core, s,
+                                     release, release_order, None)
                  for s in schedules]
     return batch_scenarios(scenarios)
 
@@ -573,6 +607,101 @@ def repeat_batch(batch: ScenarioBatch, k: int) -> ScenarioBatch:
         n_scenarios=batch.n_scenarios * k,
         max_subtasks=batch.max_subtasks, max_preds=batch.max_preds,
         depth=batch.depth, **rep)
+
+
+# ---------------------------------------------------------------------------
+# population lowering — device-resident mapping search (repro.search.device)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PopulationArrays:
+    """Pre-lowered (graph, machine) constants for *device-side*
+    population fitness: everything a genome needs to decode into finish
+    times is resolved to fixed-shape arrays in one fixed topological
+    order, so a whole GA generation is pure gathers + one scan — no
+    per-candidate re-lowering, ever. All per-subtask arrays live in
+    **topological-position coordinates** (``topo_sid`` maps back to
+    sids); predecessor slots are padded to ``max_preds`` with the
+    sentinel position ``S`` (an always-zero end slot).
+
+    Built once per (graph, machine) pair and cached on the graph — the
+    population axis exists only on device, this object is candidate-free.
+    """
+
+    n_tasks: int
+    n_subtasks: int                 # S
+    n_cores: int                    # C
+    max_preds: int                  # P (>= 1)
+    topo_sid: np.ndarray            # (S,)   int32 — topo position -> sid
+    gene: np.ndarray                # (S,)   int32 — gene slot of the task
+    exec_core: np.ndarray           # (S, C) f64 — topo-permuted exec times
+    pred_pos: np.ndarray            # (S, P) int32 — pred topo position, S pad
+    pred_gene: np.ndarray           # (S, P) int32 — pred's gene slot, 0 pad
+    pred_vol: np.ndarray            # (S, P) f64 — edge volume, 0 pad
+    lat: np.ndarray                 # (C, C) f64
+    bw: np.ndarray                  # (C, C) f64
+
+
+def population_arrays(graph: AppGraph, machine: MachineModel
+                      ) -> PopulationArrays:
+    """Lower one (graph, machine) pair for device-resident search.
+
+    The topological order is the same deterministic sid-ordered Kahn
+    walk the host decoder uses (``search.encoding.topo_order``), so an
+    append-only device decode and the host ``decode(gap_fill=False)``
+    place subtasks in the same sequence."""
+    import heapq
+
+    ga = graph_arrays(graph)
+    ma = machine_arrays(machine)
+    cached = getattr(graph, "_population_arrays", None)
+    fp = (len(graph.subtasks), len(graph.edges))
+    if cached is not None and cached[0] == fp and cached[1] is ma:
+        return cached[2]
+    s = ga.n_subtasks
+    indeg = (ga.pred_ptr[1:] - ga.pred_ptr[:-1]).tolist()
+    succ_ptr, succ_sid = ga.succ_ptr.tolist(), ga.succ_sid.tolist()
+    heap = [i for i in range(s) if indeg[i] == 0]
+    heapq.heapify(heap)
+    order: list[int] = []
+    while heap:
+        sid = heapq.heappop(heap)
+        order.append(sid)
+        for j in range(succ_ptr[sid], succ_ptr[sid + 1]):
+            t = succ_sid[j]
+            indeg[t] -= 1
+            if indeg[t] == 0:
+                heapq.heappush(heap, t)
+    assert len(order) == s, "graph has a cycle"
+    topo_sid = np.asarray(order, np.int32)
+    pos_of = np.zeros(s, np.int64)
+    pos_of[topo_sid] = np.arange(s)
+    gene_of_tid = {tid: k for k, tid in enumerate(graph.tasks)}
+    gene_sid = np.asarray([gene_of_tid[st.task_id] for st in graph.subtasks],
+                          np.int32) if s else np.zeros(0, np.int32)
+    p_max = max(1, int((ga.pred_ptr[1:] - ga.pred_ptr[:-1]).max(initial=0)))
+    pred_pos = np.full((s, p_max), s, np.int32)
+    pred_gene = np.zeros((s, p_max), np.int32)
+    pred_vol = np.zeros((s, p_max))
+    ptr = ga.pred_ptr
+    for p in range(s):
+        sid = int(topo_sid[p])
+        lo, hi = int(ptr[sid]), int(ptr[sid + 1])
+        k = hi - lo
+        pred_pos[p, :k] = pos_of[ga.pred_sid[lo:hi]]
+        pred_gene[p, :k] = gene_sid[ga.pred_sid[lo:hi]]
+        pred_vol[p, :k] = ga.pred_vol[lo:hi]
+    pa = PopulationArrays(
+        n_tasks=ga.n_tasks, n_subtasks=s, n_cores=ma.n_cores,
+        max_preds=p_max,
+        topo_sid=_frozen(topo_sid),
+        gene=_frozen(gene_sid[topo_sid] if s else gene_sid),
+        exec_core=_frozen(_exec_core(ga, ma)[topo_sid]),
+        pred_pos=_frozen(pred_pos), pred_gene=_frozen(pred_gene),
+        pred_vol=_frozen(pred_vol), lat=ma.lat, bw=ma.bw,
+    )
+    graph._population_arrays = (fp, ma, pa)
+    return pa
 
 
 def dense_lags(batch: ScenarioBatch) -> tuple[np.ndarray, np.ndarray]:

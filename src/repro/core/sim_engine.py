@@ -23,8 +23,9 @@ Two execution paths, both fed by :mod:`repro.core.lowering`:
   deps ∪ in-order edges) every value is final. Contention is a fluid,
   time-coupled process and stays on the per-scenario event path; the
   batched path is the throughput validator (`benchmarks/sim_bench.py`).
-  ``backend="pallas"`` runs the same sweep as the ``sim_step`` kernel
-  (``kernels/sim_step.py``) on dense lag tensors.
+  ``backend="pallas"`` runs the same sweep as the sparse population
+  kernel (``kernels/sim_step.sim_relax_pop``) on padded (B, S, P+1)
+  predecessor gathers — O(B·S·P) memory, so 1k+-subtask suites fit.
 """
 
 from __future__ import annotations
@@ -35,7 +36,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .lowering import (ScenarioArrays, ScenarioBatch, batch_scenarios,
-                       dense_lags, lower_scenario)
+                       lower_scenario)
 from .machine import MachineModel
 from .mpaha import AppGraph
 from .simulator import SimResult
@@ -494,8 +495,9 @@ def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
     ``seeds`` — one jitter seed per scenario (default ``range(B)``);
     the draws are per-subtask lognormal like the event simulator's, in
     sid order rather than event order (statistically identical).
-    ``backend="pallas"`` runs the ``sim_step`` kernel on dense lag
-    tensors in float32 (falls back to NumPy when JAX is unavailable).
+    ``backend="pallas"`` runs the sparse ``sim_relax_pop`` kernel on
+    padded predecessor gathers in float32 (falls back to NumPy when JAX
+    is unavailable).
     """
     if not isinstance(batch, ScenarioBatch):
         batch = batch_scenarios(batch)
@@ -523,11 +525,32 @@ def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
                           t_est=batch.t_est, n_sub=batch.n_sub)
 
 
+def _pop_gather_inputs(batch: ScenarioBatch):
+    """(B, S, P+1) gather sources + split lat/volbw lags for the sparse
+    population kernel (``kernels/sim_step.sim_relax_pop``): the in-order
+    core edge rides as one more zero-lag predecessor column, pads keep
+    the sentinel index ``S`` with ``-inf`` lags. Cached on the batch —
+    unlike :func:`~repro.core.lowering.dense_lags` this stays O(B·S·P),
+    so 1k+-subtask batches fit on device."""
+    cached = batch.__dict__.get("_pop_gather_inputs")
+    if cached is not None:
+        return cached
+    s = batch.max_subtasks
+    prev = batch.prev[:, :, None]
+    pred = np.concatenate([batch.pred, prev], axis=2)
+    inorder = np.where(prev < s, 0.0, -np.inf)
+    lat = np.concatenate([batch.pred_lat, inorder], axis=2)
+    volbw = np.concatenate([batch.pred_volbw, inorder], axis=2)
+    cached = (pred, lat, volbw)
+    object.__setattr__(batch, "_pop_gather_inputs", cached)
+    return cached
+
+
 def _relax_pallas(batch: ScenarioBatch, duration: np.ndarray) -> np.ndarray:
-    from ..kernels.ops import sim_relax
-    lat, volbw = dense_lags(batch)
-    end = sim_relax(lat, volbw, duration, batch.release,
-                    n_steps=batch.depth)
+    from ..kernels.ops import sim_relax_pop
+    pred, lat, volbw = _pop_gather_inputs(batch)
+    end = sim_relax_pop(pred, lat, volbw, duration, batch.release,
+                        n_steps=batch.depth)
     return np.asarray(end, np.float64)
 
 

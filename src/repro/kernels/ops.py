@@ -53,6 +53,13 @@ def sim_relax(lat, volbw, duration, release, *, n_steps, sub_block=128):
                           sub_block=sub_block, interpret=not _on_tpu())
 
 
+def sim_relax_pop(pred, lat, volbw, duration, release, *, n_steps,
+                  sub_block=128):
+    return _sim.sim_relax_pop(pred, lat, volbw, duration, release,
+                              n_steps=n_steps, sub_block=sub_block,
+                              interpret=not _on_tpu())
+
+
 def flash_decode(q, k_cache, v_cache, pos, *, scale=None, softcap=None,
                  ring=False, kv_block=512):
     return _fd.flash_decode(q, k_cache, v_cache, pos, scale=scale,

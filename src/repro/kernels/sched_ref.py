@@ -5,6 +5,8 @@ can degrade gracefully when JAX is absent."""
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro.core.lowering import drain_matrix as _drain_matrix
@@ -25,6 +27,10 @@ def drain_matrix(graphs, machine) -> np.ndarray:
 
     Deprecated alias: the lowering lives in
     :func:`repro.core.lowering.drain_matrix` now (the shared scenario
-    IR owns every graph/machine -> array derivation); kept so kernel
-    callers don't carry a private lowering copy."""
+    IR owns every graph/machine -> array derivation). Emits a
+    ``DeprecationWarning`` — import from ``repro.core.lowering``."""
+    warnings.warn(
+        "repro.kernels.sched_ref.drain_matrix is deprecated; use "
+        "repro.core.lowering.drain_matrix",
+        DeprecationWarning, stacklevel=2)
     return _drain_matrix(graphs, machine)

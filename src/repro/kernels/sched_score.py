@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .sched_ref import drain_matrix  # noqa: F401  (kernel-facing re-export)
+from repro.core.lowering import drain_matrix  # noqa: F401  (re-export)
 
 
 def _score_kernel(drain_ref, f_ref, r_ref, o_ref):

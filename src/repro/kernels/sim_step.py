@@ -127,3 +127,101 @@ def sim_step(end, lat, volbw, duration, release, *, sub_block: int = 128,
                               interpret)
     end = _pad_axis(jnp.asarray(end, jnp.float32), 1, sp - s, 0.0)
     return step(end)[:, :s]
+
+
+# ---------------------------------------------------------------------------
+# population-axis variant: sparse predecessor gathers instead of dense
+# (B, S, S) lag tensors — O(B·S·P) memory, the shape a device-resident
+# GA population (repro.search.device) and large ScenarioBatches need.
+# ---------------------------------------------------------------------------
+
+def pop_step_np(end, pred, lat, volbw, duration, release) -> np.ndarray:
+    """NumPy oracle for one sparse population sweep (dtype-preserving).
+
+    ``end`` (B, E) finish times with every sentinel slot holding 0;
+    ``pred`` (B, S, P) int gather sources into the E axis (pads point at
+    a sentinel slot); ``lat``/``volbw`` (B, S, P) with ``-inf`` pads;
+    ``duration``/``release`` (B, S). The two-add shape ``(end + lat) +
+    volbw`` matches the dense kernel and the event simulator."""
+    end = np.asarray(end)
+    b = end.shape[0]
+    g = end[np.arange(b)[:, None, None], np.asarray(pred)]
+    ready = ((g + np.asarray(lat)) + np.asarray(volbw)).max(axis=-1,
+                                                            initial=-np.inf)
+    zero = end.dtype.type(0.0)
+    return np.asarray(duration) + np.maximum(np.asarray(release),
+                                             np.maximum(ready, zero))
+
+
+def pop_relax_np(pred, lat, volbw, duration, release, *,
+                 n_steps: int) -> np.ndarray:
+    """Iterated float32 oracle for :func:`sim_relax_pop` — bit-for-bit
+    the kernel's result (same expressions, same f32 arithmetic).
+    Sentinel convention: ``pred == S`` points at an always-zero slot."""
+    pred = np.asarray(pred)
+    b, s, _ = pred.shape
+    lat = np.asarray(lat, np.float32)
+    volbw = np.asarray(volbw, np.float32)
+    duration = np.asarray(duration, np.float32)
+    release = np.asarray(release, np.float32)
+    end = np.zeros((b, s + 1), np.float32)
+    for _ in range(n_steps):
+        end[:, :s] = pop_step_np(end, pred, lat, volbw, duration, release)
+    return np.array(end[:, :s])
+
+
+def _pop_step_kernel(end_ref, pred_ref, lat_ref, volbw_ref, dur_ref,
+                     rel_ref, o_ref):
+    end = end_ref[0]                          # (Sp,) current finish times
+    gath = jnp.take(end, pred_ref[0], axis=0)            # (sb, P)
+    ready = jnp.max((gath + lat_ref[0]) + volbw_ref[0], axis=-1)
+    o_ref[0] = dur_ref[0] + jnp.maximum(rel_ref[0],
+                                        jnp.maximum(ready, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps", "sub_block",
+                                             "interpret"))
+def sim_relax_pop(pred, lat, volbw, duration, release, *, n_steps: int,
+                  sub_block: int = 128, interpret: bool = False):
+    """Iterate the sparse population sweep ``n_steps`` times from zeros.
+
+    Inputs are the padded-CSR gather form: ``pred`` (B, S, P) int32
+    sources with sentinel ``S``, ``lat``/``volbw`` (B, S, P) per-edge
+    lags (``-inf`` pads), ``duration``/``release`` (B, S). The padded
+    end buffer keeps one extra 128-aligned region whose rows evaluate
+    to exactly 0 every sweep (0 duration, 0 release, all-(-inf) lags),
+    so the sentinel slot needs no special handling inside the kernel.
+    Returns (B, S) float32 finish times."""
+    pred = jnp.asarray(pred, jnp.int32)
+    lat = jnp.asarray(lat, jnp.float32)
+    volbw = jnp.asarray(volbw, jnp.float32)
+    duration = jnp.asarray(duration, jnp.float32)
+    release = jnp.asarray(release, jnp.float32)
+    b, s, p = pred.shape
+    sp = max(sub_block, ((s + 1 + 127) // 128) * 128)
+    sb = min(sub_block, sp)
+    pad = sp - s
+    pred = _pad_axis(pred, 1, pad, s)
+    lat = _pad_axis(lat, 1, pad, -jnp.inf)
+    volbw = _pad_axis(volbw, 1, pad, -jnp.inf)
+    duration = _pad_axis(duration, 1, pad, 0.0)
+    release = _pad_axis(release, 1, pad, 0.0)
+
+    call = pl.pallas_call(
+        _pop_step_kernel,
+        grid=(b, sp // sb),
+        in_specs=[pl.BlockSpec((1, sp), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, sb, p), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((1, sb, p), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((1, sb, p), lambda i, j: (i, j, 0)),
+                  pl.BlockSpec((1, sb), lambda i, j: (i, j)),
+                  pl.BlockSpec((1, sb), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, sb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, sp), jnp.float32),
+        interpret=interpret,
+    )
+    end = jax.lax.fori_loop(
+        0, n_steps,
+        lambda _, e: call(e, pred, lat, volbw, duration, release),
+        jnp.zeros((b, sp), jnp.float32))
+    return end[:, :s]

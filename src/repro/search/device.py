@@ -1,0 +1,324 @@
+"""Device-resident GA: decode → lower → relax → select in one jitted step.
+
+The host GA (``search/ga.py``) batches *fitness*, but every generation
+still round-trips through Python: B candidates are decoded one at a
+time on a Timeline, lowered one at a time to ScenarioArrays, and the
+selection/crossover/mutation loop runs on host NumPy. This module puts
+the whole generation on device:
+
+* **Pre-lowering** (:func:`device_inputs`). One
+  :func:`repro.core.lowering.population_arrays` call resolves the
+  (graph, machine) pair to fixed-shape topo-ordered arrays — exec
+  times, padded predecessor slots, comm matrices — built once and
+  reused by *every* generation. Nothing graph- or machine-shaped is
+  touched again after the first call.
+* **Decode as gathers.** A population ``genes`` (B, n_tasks) turns
+  into per-subtask cores, durations and per-edge (latency, vol/bw)
+  lags with pure ``jnp.take`` gathers — no per-candidate loop.
+* **Fitness as a fused scan** (:func:`population_ends`). The
+  append-only list decode (place each subtask in the fixed topological
+  order at ``max(ready, core frontier)``) is one ``lax.scan`` over
+  topo slots, vmapped over candidates: finish times for the whole
+  population in a single XLA computation. Alternatively
+  (``method="kernel"``, the default on TPU) the same recurrence runs
+  as synchronous max-plus sweeps through the population-axis Pallas
+  kernel ``kernels/sim_step.sim_relax_pop`` — acyclic, so both reach
+  the identical fixpoint bit-for-bit (``kernels.ref.sim_relax_pop_ref``
+  is the NumPy oracle, pinned by ``tests/test_search.py``).
+* **Selection on device** (:func:`ga_search_device`). Tournament +
+  elite-bias parent draws, uniform crossover and gene resampling are
+  jitted ``jax.random`` array ops under one threaded PRNG key — no
+  host RNG anywhere in the loop. One generation = one jitted call.
+
+Semantics: the device decoder is **append-only** — it does not backfill
+earliest gaps like the host ``decode`` (gap search is a data-dependent
+Timeline walk), so device fitness can exceed host fitness where a gap
+would have helped; ``decode(gap_fill=False)`` is the host-side oracle
+of exactly this semantics. The ``ga <= engine`` invariant is untouched:
+``ga_schedule`` re-decodes the evolved winner with the full gap-filling
+host decoder and returns the better of it and the heuristic baseline.
+
+``frozen`` placements (mid-flight recovery) stay on the host path —
+``GAParams(device=True)`` falls back automatically there.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core import lowering
+from ..core.machine import MachineModel
+from ..core.mpaha import AppGraph
+from .local import hill_climb_device
+
+
+class DevicePopulation(NamedTuple):
+    """Device view of :class:`repro.core.lowering.PopulationArrays`
+    (+ release floors), float32, in topo-position coordinates. A
+    NamedTuple so it is a pytree — jitted steps take it as an argument
+    instead of baking the arrays in as constants."""
+
+    topo_gene: jnp.ndarray          # (S,)   int32 — gene slot per topo pos
+    exec_core: jnp.ndarray          # (S, C) f32
+    pred_pos: jnp.ndarray           # (S, P) int32 — pred topo pos, S pad
+    pred_gene: jnp.ndarray          # (S, P) int32 — pred's gene slot
+    pred_vol: jnp.ndarray           # (S, P) f32 — edge volume, 0 pad
+    pred_pad: jnp.ndarray           # (S, P) bool — True at padding
+    lat: jnp.ndarray                # (C, C) f32
+    bw: jnp.ndarray                 # (C, C) f32
+    release: jnp.ndarray            # (S,)   f32 — topo-permuted floors
+
+    @property
+    def n_subtasks(self) -> int:
+        return self.topo_gene.shape[0]
+
+    @property
+    def n_cores(self) -> int:
+        return self.lat.shape[0]
+
+
+def device_inputs(graph: AppGraph, machine: MachineModel, *,
+                  releases: dict[int, float] | None = None
+                  ) -> DevicePopulation:
+    """Lower once, search forever: the per-(graph, machine) constants of
+    every generation, shipped to device. ``releases`` (sid -> floor)
+    folds into a per-subtask floor vector like the host lowering."""
+    pa = lowering.population_arrays(graph, machine)
+    rel = np.zeros(pa.n_subtasks, np.float32)
+    if releases:
+        for sid, t in releases.items():
+            if not 0 <= sid < pa.n_subtasks:
+                raise ValueError(f"release for unknown subtask {sid} "
+                                 f"(graph has {pa.n_subtasks})")
+            rel[sid] = t
+        rel = rel[pa.topo_sid]
+    return DevicePopulation(
+        topo_gene=jnp.asarray(pa.gene),
+        exec_core=jnp.asarray(pa.exec_core, jnp.float32),
+        pred_pos=jnp.asarray(pa.pred_pos),
+        pred_gene=jnp.asarray(pa.pred_gene),
+        pred_vol=jnp.asarray(pa.pred_vol, jnp.float32),
+        pred_pad=jnp.asarray(pa.pred_pos == pa.n_subtasks),
+        lat=jnp.asarray(pa.lat, jnp.float32),
+        bw=jnp.asarray(pa.bw, jnp.float32),
+        release=jnp.asarray(rel),
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode: genes -> cores / durations / per-edge lags, all gathers
+# ---------------------------------------------------------------------------
+
+def _decode_common(inp: DevicePopulation, genes):
+    """(core, duration, lag_lat, lag_volbw) of a population — (B, S) and
+    (B, S, P), f32. Volume-free edges arrive instantly (the simulator's
+    edge rule); pads carry ``-inf`` so they never win the readiness max."""
+    b = genes.shape[0]
+    s, p = inp.pred_pos.shape
+    core = jnp.take(genes, inp.topo_gene, axis=1)                  # (B, S)
+    dur = inp.exec_core[jnp.arange(s)[None, :], core]              # (B, S)
+    src = jnp.take(genes, inp.pred_gene.reshape(-1),
+                   axis=1).reshape(b, s, p)                        # (B, S, P)
+    dst = core[:, :, None]
+    has_comm = ~inp.pred_pad & (inp.pred_vol > 0.0)
+    lag_lat = jnp.where(inp.pred_pad, -jnp.inf,
+                        jnp.where(has_comm, inp.lat[src, dst], 0.0))
+    lag_volbw = jnp.where(inp.pred_pad, -jnp.inf,
+                          jnp.where(has_comm,
+                                    inp.pred_vol / inp.bw[src, dst], 0.0))
+    return core, dur, lag_lat, lag_volbw
+
+
+def _candidate_ends_scan(inp: DevicePopulation, core, dur, lag_lat,
+                         lag_volbw):
+    """(S,) finish times of one candidate: the append-only list decode
+    as a ``lax.scan`` over topo slots. The carry is the (S+1,) end
+    vector (slot S = sentinel 0) plus the (C,) per-core frontier — the
+    in-order execution edge without materialising ``prev``."""
+    s = core.shape[0]
+    c = inp.lat.shape[0]
+
+    def step(carry, xs):
+        ends, frontier = carry
+        pos, preds, ll, lv, cr, d, r = xs
+        ready = jnp.max((ends[preds] + ll) + lv)
+        ready = jnp.maximum(jnp.maximum(ready, r), frontier[cr])
+        e = d + jnp.maximum(ready, 0.0)
+        return (ends.at[pos].set(e), frontier.at[cr].set(e)), None
+
+    (ends, _), _ = jax.lax.scan(
+        step,
+        (jnp.zeros(s + 1, jnp.float32), jnp.zeros(c, jnp.float32)),
+        (jnp.arange(s), inp.pred_pos, lag_lat, lag_volbw, core, dur,
+         inp.release))
+    return ends[:s]
+
+
+def _prev_on_core(core, sentinel: int):
+    """(B, S) topo position of the previous same-core subtask (the
+    in-order edge), ``sentinel`` where none — per candidate, via one
+    stable argsort grouping topo positions by core."""
+    b, s = core.shape
+    order = jnp.argsort(core, axis=1)          # stable: topo order per core
+    sorted_core = jnp.take_along_axis(core, order, axis=1)
+    same = sorted_core[:, 1:] == sorted_core[:, :-1]
+    prev_sorted = jnp.concatenate(
+        [jnp.full((b, 1), sentinel, order.dtype),
+         jnp.where(same, order[:, :-1], sentinel)], axis=1)
+    rows = jnp.arange(b)[:, None]
+    return jnp.zeros_like(core).at[rows, order].set(prev_sorted)
+
+
+def population_gather_inputs(inp: DevicePopulation, genes):
+    """(pred, lat, volbw, duration, release) in the population-kernel
+    gather shape — the device decode resolved to ``sim_relax_pop``
+    inputs, the in-order core edge appended as a zero-lag column."""
+    s = inp.n_subtasks
+    b = genes.shape[0]
+    core, dur, lag_lat, lag_volbw = _decode_common(inp, genes)
+    prev = _prev_on_core(core, s)[:, :, None]
+    inorder = jnp.where(prev < s, 0.0, -jnp.inf)
+    pred = jnp.concatenate(
+        [jnp.broadcast_to(inp.pred_pos[None], (b, s, inp.pred_pos.shape[1])),
+         prev], axis=2)
+    lat = jnp.concatenate([lag_lat, inorder], axis=2)
+    volbw = jnp.concatenate([lag_volbw, inorder], axis=2)
+    rel = jnp.broadcast_to(inp.release[None], (b, s))
+    return pred, lat, volbw, dur, rel
+
+
+@jax.jit
+def population_ends(inp: DevicePopulation, genes) -> jnp.ndarray:
+    """(B, S) finish times (topo coordinates, f32) of a whole population
+    — the fused scan path."""
+    core, dur, lag_lat, lag_volbw = _decode_common(inp, genes)
+    return jax.vmap(
+        lambda c, d, l1, l2: _candidate_ends_scan(inp, c, d, l1, l2)
+    )(core, dur, lag_lat, lag_volbw)
+
+
+def population_ends_kernel(inp: DevicePopulation, genes) -> jnp.ndarray:
+    """(B, S) finish times via the population-axis Pallas kernel
+    (``kernels/sim_step.sim_relax_pop``): S synchronous max-plus sweeps
+    reach the same acyclic fixpoint as the scan, bit-for-bit."""
+    from ..kernels import ops
+    pred, lat, volbw, dur, rel = _prepare_kernel_inputs(inp, genes)
+    return ops.sim_relax_pop(pred, lat, volbw, dur, rel,
+                             n_steps=inp.n_subtasks)
+
+
+_prepare_kernel_inputs = jax.jit(population_gather_inputs)
+
+
+def population_fitness_device(inp: DevicePopulation, genes, *,
+                              method: str = "scan") -> jnp.ndarray:
+    """(B,) makespans of a population — max finish time per candidate."""
+    if inp.n_subtasks == 0:
+        return jnp.zeros(genes.shape[0], jnp.float32)
+    ends = (population_ends_kernel if method == "kernel"
+            else population_ends)(inp, genes)
+    return jnp.max(ends, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# one jitted generation: select -> crossover -> mutate -> evaluate
+# ---------------------------------------------------------------------------
+
+def _generation(inp: DevicePopulation, key, pop, fit, *, n_cores: int,
+                elite: int, tournament: int, elite_bias: float,
+                p_mut: float, method: str):
+    """(new_pop, new_fit): the full bias-elitist generation as array
+    ops. Selection is tournament-of-``k`` by fitness gather; a
+    ``elite_bias`` fraction of first parents comes from the sorted
+    elite pool; the top ``elite`` rows survive unchanged."""
+    b, t = pop.shape
+    order = jnp.argsort(fit)
+    pop, fit = pop[order], fit[order]
+    k_bias, k_el, k_ta, k_tb, k_x, k_m, k_g = jax.random.split(key, 7)
+    rows = jnp.arange(b)
+    ta = jax.random.randint(k_ta, (b, tournament), 0, b)
+    a = ta[rows, jnp.argmin(fit[ta], axis=1)]
+    use_elite = jax.random.uniform(k_bias, (b,)) < elite_bias
+    a = jnp.where(use_elite,
+                  jax.random.randint(k_el, (b,), 0, max(elite, 1)), a)
+    tb = jax.random.randint(k_tb, (b, tournament), 0, b)
+    bb = tb[rows, jnp.argmin(fit[tb], axis=1)]
+    cross = jax.random.uniform(k_x, (b, t)) < 0.5
+    child = jnp.where(cross, pop[a], pop[bb])
+    mut = jax.random.uniform(k_m, (b, t)) < p_mut
+    child = jnp.where(
+        mut, jax.random.randint(k_g, (b, t), 0, n_cores, pop.dtype), child)
+    if elite:
+        child = child.at[:elite].set(pop[:elite])
+    return child, population_fitness_device(inp, child, method=method)
+
+
+def generation_step(params, *, n_tasks: int, n_cores: int,
+                    method: str = "scan"):
+    """The jitted ``(inp, key, pop, fit) -> (pop, fit)`` generation step
+    :func:`ga_search_device` iterates — exposed so the benchmark can
+    time one device generation in isolation (warm the jit cache with
+    one call first)."""
+    p_mut = params.p_mutation if params.p_mutation is not None \
+        else max(1.0 / max(n_tasks, 1), 0.02)
+    return jax.jit(functools.partial(
+        _generation, n_cores=n_cores, elite=params.elite,
+        tournament=params.tournament, elite_bias=params.elite_bias,
+        p_mut=p_mut, method=method))
+
+
+def ga_search_device(graph: AppGraph, machine: MachineModel, *,
+                     seed: int = 0, params=None,
+                     elites: list[np.ndarray] | None = None,
+                     releases: dict[int, float] | None = None,
+                     method: str | None = None
+                     ) -> tuple[np.ndarray, float]:
+    """Device-resident twin of :func:`repro.search.ga.ga_search`:
+    returns ``(best_vector, best_fitness)`` with the fitness under the
+    append-only device semantics (float32). Deterministic under
+    ``seed`` — the PRNG is one threaded ``jax.random`` key, so reruns
+    (and re-jits) reproduce bit-identically. ``method`` picks the
+    fitness path: ``"scan"`` (fused scan, default off-TPU) or
+    ``"kernel"`` (population-axis Pallas sweeps, default on TPU)."""
+    from .ga import GAParams
+
+    par = params or GAParams()
+    graph.finalize()
+    n_tasks = len(graph.tasks)
+    n_cores = machine.n_cores
+    if method is None:
+        method = "kernel" if jax.default_backend() == "tpu" else "scan"
+    inp = device_inputs(graph, machine, releases=releases)
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    pop = jax.random.randint(k0, (par.pop_size, n_tasks), 0,
+                             max(n_cores, 1), jnp.int32)
+    if elites:
+        seeded = np.array(pop)
+        for i, e in enumerate(elites[:par.pop_size]):
+            seeded[i] = np.asarray(e, np.int32)
+        pop = jnp.asarray(seeded)
+
+    fitness = functools.partial(population_fitness_device, method=method)
+    step = generation_step(par, n_tasks=n_tasks, n_cores=n_cores,
+                           method=method)
+    fit = fitness(inp, pop)
+    for _ in range(par.generations):
+        key, kg = jax.random.split(key)
+        pop, fit = step(inp, kg, pop, fit)
+
+    best = int(jnp.argmin(fit))
+    vec, val = np.asarray(pop[best], np.int32).copy(), float(fit[best])
+    if par.refine_rounds > 0 and n_tasks > 0 and n_cores > 1:
+        key, kr = jax.random.split(key)
+        vec, val = hill_climb_device(fitness, inp, vec, val, key=kr,
+                                     rounds=par.refine_rounds,
+                                     moves=par.refine_moves,
+                                     n_cores=n_cores)
+    return vec, val

@@ -94,7 +94,7 @@ def encode(graph: AppGraph, schedule, strict: bool = True) -> np.ndarray:
 
 def decode(graph: AppGraph, machine: MachineModel, assign,
            *, releases: dict[int, float] | None = None,
-           frozen: dict | None = None) -> Timeline:
+           frozen: dict | None = None, gap_fill: bool = True) -> Timeline:
     """Core vector -> schedule, via topological list placement.
 
     Each subtask starts at the earliest free gap on its task's core at
@@ -108,7 +108,12 @@ def decode(graph: AppGraph, machine: MachineModel, assign,
     intervals are pre-placed verbatim, genes only steer the remaining
     subtasks, and frozen predecessors feed readiness like any other.
     With frozen subtasks present the result is generally *not*
-    task-coherent (validate with ``require_task_coherence=False``)."""
+    task-coherent (validate with ``require_task_coherence=False``).
+
+    ``gap_fill=False`` switches to append-only placement: each subtask
+    starts at ``max(ready, core frontier)`` with no backfilling into
+    earlier gaps — the exact semantics of the device-resident decoder
+    (``repro.search.device``), kept here as its host oracle."""
     assign = np.asarray(assign, np.int32)
     tids = task_ids(graph)
     if len(assign) != len(tids):
@@ -125,6 +130,13 @@ def decode(graph: AppGraph, machine: MachineModel, assign,
     if frozen:
         sch.extend_sorted((sid, p.core, p.start, p.end)
                           for sid, p in frozen.items())
+    frontier = None
+    if not gap_fill:
+        frontier = [0.0] * machine.n_cores
+        if frozen:
+            for p in frozen.values():
+                if p.end > frontier[p.core]:
+                    frontier[p.core] = p.end
     placements = sch.placements
     for sid in topo_order(graph):
         if frozen and sid in placements:
@@ -138,13 +150,19 @@ def decode(graph: AppGraph, machine: MachineModel, assign,
             if cand > ready:
                 ready = cand
         dur = exec_rows[sid][core]
-        start = sch.earliest_slot(core, ready, dur)
+        if gap_fill:
+            start = sch.earliest_slot(core, ready, dur)
+        else:
+            start = max(ready, frontier[core])
+            frontier[core] = start + dur
         sch.place(sid, core, start, start + dur)
     return sch
 
 
 def decode_population(graph: AppGraph, machine: MachineModel, population,
                       *, releases: dict[int, float] | None = None,
-                      frozen: dict | None = None) -> list[Timeline]:
-    return [decode(graph, machine, a, releases=releases, frozen=frozen)
+                      frozen: dict | None = None,
+                      gap_fill: bool = True) -> list[Timeline]:
+    return [decode(graph, machine, a, releases=releases, frozen=frozen,
+                   gap_fill=gap_fill)
             for a in population]

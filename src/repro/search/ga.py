@@ -51,7 +51,9 @@ from .local import hill_climb
 @dataclass(frozen=True)
 class GAParams:
     """Search budget and operator rates (defaults sized so the full
-    ``--scheduler ga`` paper tables stay minutes, not hours)."""
+    ``--scheduler ga`` paper tables stay minutes, not hours). Validated
+    on construction — a bad budget fails loudly at the call site, not
+    as a silent empty population deep in the loop."""
 
     pop_size: int = 32
     generations: int = 24
@@ -62,6 +64,32 @@ class GAParams:
     refine_rounds: int = 3          # hill-climbing rounds on the winner
     refine_moves: int = 48          # sampled single-task moves per round
     backend: str = "numpy"          # fitness path: "numpy" | "pallas"
+    device: bool = False            # device-resident loop (search/device)
+
+    def __post_init__(self) -> None:
+        if self.pop_size < 1:
+            raise ValueError(f"pop_size must be >= 1, got {self.pop_size}")
+        if not 0 <= self.elite <= self.pop_size:
+            raise ValueError(f"elite must be in [0, pop_size={self.pop_size}]"
+                             f", got {self.elite}")
+        if self.generations < 1:
+            raise ValueError("generations must be positive, got "
+                             f"{self.generations}")
+        if self.tournament < 1:
+            raise ValueError(f"tournament must be >= 1, got "
+                             f"{self.tournament}")
+        if not 0.0 <= self.elite_bias <= 1.0:
+            raise ValueError(f"elite_bias must be in [0, 1], got "
+                             f"{self.elite_bias}")
+        if self.p_mutation is not None and not 0.0 <= self.p_mutation <= 1.0:
+            raise ValueError(f"p_mutation must be in [0, 1] (or None), got "
+                             f"{self.p_mutation}")
+        if self.refine_rounds < 0 or self.refine_moves < 0:
+            raise ValueError("refine_rounds/refine_moves must be >= 0, got "
+                             f"{self.refine_rounds}/{self.refine_moves}")
+        if self.backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown fitness backend {self.backend!r} "
+                             "(expected 'numpy' or 'pallas')")
 
 
 def population_fitness(graph: AppGraph, machine: MachineModel, population,
@@ -94,6 +122,31 @@ def _tournament(fitness: np.ndarray, rng: np.random.Generator,
     return int(cand[np.argmin(fitness[cand])])
 
 
+def next_generation(pop: np.ndarray, fit: np.ndarray,
+                    rng: np.random.Generator, par: GAParams, *,
+                    p_mut: float, n_cores: int) -> np.ndarray:
+    """One host selection/crossover/mutation step (sort by fitness,
+    bias-elitist parent draws, uniform crossover, per-gene resampling,
+    elites through unchanged) — the exact loop body of
+    :func:`ga_search`, exposed so the benchmark can time the select
+    phase in isolation. Consumes ``rng`` exactly as the search does."""
+    n_tasks = pop.shape[1]
+    order = np.argsort(fit, kind="stable")
+    pop, fit = pop[order], fit[order]
+    nxt = np.empty_like(pop)
+    nxt[:par.elite] = pop[:par.elite]
+    for i in range(par.elite, par.pop_size):
+        if rng.random() < par.elite_bias:
+            a = int(rng.integers(0, max(par.elite, 1)))
+        else:
+            a = _tournament(fit, rng, par.tournament)
+        b = _tournament(fit, rng, par.tournament)
+        cross = rng.random(n_tasks) < 0.5
+        nxt[i] = np.where(cross, pop[a], pop[b])
+    _mutate(nxt, rng, p_mut, n_cores, par.elite)
+    return nxt
+
+
 def ga_search(graph: AppGraph, machine: MachineModel, *, seed: int = 0,
               params: GAParams | None = None,
               elites: list[np.ndarray] | None = None,
@@ -106,8 +159,19 @@ def ga_search(graph: AppGraph, machine: MachineModel, *, seed: int = 0,
     ``pop_size``); pass the encoded heuristic placement(s) here. The
     whole run is deterministic under ``seed``. ``frozen`` pins already
     started/finished placements into every candidate (recovery's
-    mid-flight re-mapping)."""
+    mid-flight re-mapping).
+
+    ``params.device=True`` routes the whole loop through the
+    device-resident twin (``repro.search.device``): decode, fitness,
+    selection and mutation as one jitted generation step per iteration,
+    append-only decode semantics, float32 fitness. ``frozen`` history
+    has data-dependent shapes and stays on the host path."""
     par = params or GAParams()
+    if par.device and not frozen:
+        from .device import ga_search_device
+
+        return ga_search_device(graph, machine, seed=seed, params=par,
+                                elites=elites, releases=releases)
     graph.finalize()
     n_tasks = len(graph.tasks)
     n_cores = machine.n_cores
@@ -125,20 +189,8 @@ def ga_search(graph: AppGraph, machine: MachineModel, *, seed: int = 0,
 
     fit = evaluate(pop)
     for _ in range(par.generations):
-        order = np.argsort(fit, kind="stable")
-        pop, fit = pop[order], fit[order]
-        nxt = np.empty_like(pop)
-        nxt[:par.elite] = pop[:par.elite]
-        for i in range(par.elite, par.pop_size):
-            if rng.random() < par.elite_bias:
-                a = int(rng.integers(0, max(par.elite, 1)))
-            else:
-                a = _tournament(fit, rng, par.tournament)
-            b = _tournament(fit, rng, par.tournament)
-            cross = rng.random(n_tasks) < 0.5
-            nxt[i] = np.where(cross, pop[a], pop[b])
-        _mutate(nxt, rng, p_mut, n_cores, par.elite)
-        pop = nxt
+        pop = next_generation(pop, fit, rng, par, p_mut=p_mut,
+                              n_cores=n_cores)
         fit = evaluate(pop)
 
     best = int(np.argmin(fit))

@@ -7,6 +7,12 @@ all sampled neighbors of a round are decoded and lowered into one
 :class:`~repro.core.lowering.ScenarioBatch` and scored by one
 ``simulate_batch`` call. Steepest-descent accept (best neighbor if it
 improves), stop on the first round with no improvement.
+
+:func:`hill_climb_device` is the device-resident twin: the same
+neighborhood and accept rule, but neighbors are sampled with
+``jax.random`` (the GA's threaded key, no host RNG) and scored by a
+device fitness callable (``repro.search.device``), so the refine stage
+of ``GAParams(device=True)`` runs are deterministic under one seed too.
 """
 
 from __future__ import annotations
@@ -60,4 +66,39 @@ def hill_climb(graph: AppGraph, machine: MachineModel, vec: np.ndarray,
         if f[best] >= fit - 1e-12:
             break
         vec, fit = neigh[best].copy(), float(f[best])
+    return vec, fit
+
+
+def hill_climb_device(fitness_fn, inp, vec: np.ndarray, fit: float, *,
+                      key, rounds: int = 3, moves: int = 48,
+                      n_cores: int) -> tuple[np.ndarray, float]:
+    """Device-scored hill climb: ``fitness_fn(inp, genes)`` maps a
+    (M, n_tasks) population to (M,) makespans (the device GA's fitness
+    callable); neighbors come from ``jax.random.choice`` without
+    replacement over the flat (task, new-core) index under ``key``.
+    Same neighborhood, accept rule and stop rule as :func:`hill_climb`."""
+    import jax
+    import jax.numpy as jnp
+
+    vec = np.asarray(vec, np.int32)
+    n_tasks = len(vec)
+    if n_cores < 2 or n_tasks == 0:
+        return vec, fit
+    full = n_tasks * (n_cores - 1)
+    m = min(moves, full)
+    rows = jnp.arange(m)
+    for _ in range(rounds):
+        key, kn = jax.random.split(key)
+        flat = jax.random.choice(kn, full, (m,), replace=False)
+        tasks = flat // (n_cores - 1)
+        shift = flat % (n_cores - 1)
+        base = jnp.asarray(vec)
+        new_core = jnp.where(shift < base[tasks], shift, shift + 1)
+        neigh = jnp.tile(base, (m, 1)).at[rows, tasks].set(
+            new_core.astype(jnp.int32))
+        f = np.asarray(fitness_fn(inp, neigh))
+        best = int(np.argmin(f))
+        if f[best] >= fit - 1e-12:
+            break
+        vec, fit = np.asarray(neigh[best], np.int32).copy(), float(f[best])
     return vec, fit

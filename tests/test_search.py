@@ -1,16 +1,22 @@
 """Mapping-search (GA + hill climber) tests: registry reachability,
 determinism, the elite-seeding invariant (GA <= engine everywhere),
-decoded-schedule validity for arbitrary gene vectors, and batched
-fitness == per-candidate event-simulator loop."""
+decoded-schedule validity for arbitrary gene vectors, batched fitness
+== per-candidate event-simulator loop, and the device-resident GA
+(``GAParams(device=True)``): fitness bit-for-bit against the
+population-kernel NumPy oracle, equivalence with the host append-only
+decode, fixed-seed determinism under jit, and the invariant on 64- and
+256-core machines."""
 
 import numpy as np
 import pytest
 
-from repro.core import (SCHEDULERS, SynthParams, dell_poweredge_1950,
-                        generate_app, get_scheduler, heterogeneous_cluster,
-                        simulate_scenario, validate)
-from repro.search import (GAParams, decode, decode_population, encode,
-                          ga_schedule, ga_search, population_fitness)
+from repro.core import (SCHEDULERS, SynthParams, cluster_of_multicores,
+                        dell_poweredge_1950, generate_app, get_scheduler,
+                        heterogeneous_cluster, hp_bl260c, lower_population,
+                        simulate_batch, simulate_scenario, validate)
+from repro.search import (GAParams, decode, decode_population, device_inputs,
+                          encode, ga_schedule, ga_search, population_fitness,
+                          population_fitness_device)
 
 FAST = GAParams(pop_size=12, generations=6, refine_rounds=1, refine_moves=12)
 
@@ -116,3 +122,143 @@ def test_online_ga_refine_keeps_validity_and_never_hurts():
     refined.state.validate()
     assert refined.state.schedule.makespan() \
         <= base.state.schedule.makespan() + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# device-resident GA (search/device.py)
+# ---------------------------------------------------------------------------
+
+FAST_DEV = GAParams(pop_size=12, generations=6, refine_rounds=1,
+                    refine_moves=12, device=True)
+
+
+def _pop(app, m, b=16, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, m.n_cores, (b, len(app.tasks)), dtype=np.int32)
+
+
+@pytest.mark.parametrize("method", ["scan", "kernel"])
+def test_device_fitness_matches_pop_kernel_oracle_bitforbit(method):
+    """Both device fitness paths (fused scan, population-axis Pallas
+    kernel) reproduce the iterated NumPy oracle ``pop_relax_np`` exactly
+    — same gathers, same f32 two-add expressions, contention-free."""
+    import jax.numpy as jnp
+
+    from repro.kernels.ref import sim_relax_pop_ref
+    from repro.search.device import population_gather_inputs
+
+    app, m = _app(2), dell_poweredge_1950()
+    pop = _pop(app, m)
+    inp = device_inputs(app, m)
+    fit = np.asarray(population_fitness_device(inp, jnp.asarray(pop),
+                                               method=method))
+    gathered = [np.asarray(x) for x in
+                population_gather_inputs(inp, jnp.asarray(pop))]
+    ends = sim_relax_pop_ref(*gathered, n_steps=inp.n_subtasks)
+    np.testing.assert_array_equal(fit, ends.max(axis=1))
+
+
+def test_device_fitness_matches_host_appendonly_decode():
+    """Device fitness == lowering + simulating the host append-only
+    decode (``gap_fill=False``) of the same genes — the device decoder's
+    host oracle, up to f32."""
+    import jax.numpy as jnp
+
+    for seed in (2, 7):
+        app, m = _app(seed), dell_poweredge_1950()
+        pop = _pop(app, m, seed=seed)
+        fit = np.asarray(population_fitness_device(
+            device_inputs(app, m), jnp.asarray(pop)))
+        scheds = decode_population(app, m, pop, gap_fill=False)
+        host = simulate_batch(lower_population(app, m, scheds)).t_exec
+        np.testing.assert_allclose(fit, host, rtol=1e-5, atol=1e-3)
+        # append-only decodes are still valid schedules
+        validate(scheds[0], app, m, require_task_coherence=True)
+
+
+def test_device_fitness_respects_release_floors():
+    import jax.numpy as jnp
+
+    app, m = _app(3), dell_poweredge_1950()
+    floors = {s: 40.0 for s in range(app.n_subtasks)}
+    pop = _pop(app, m, b=4, seed=3)
+    fit = np.asarray(population_fitness_device(
+        device_inputs(app, m, releases=floors), jnp.asarray(pop)))
+    scheds = decode_population(app, m, pop, releases=floors, gap_fill=False)
+    host = simulate_batch(lower_population(app, m, scheds,
+                                           releases=floors)).t_exec
+    np.testing.assert_allclose(fit, host, rtol=1e-5, atol=1e-3)
+    assert fit.min() >= 40.0
+
+
+def test_device_ga_deterministic_under_seed():
+    """The jitted loop is driven by one threaded PRNG key: same seed,
+    same winner, bit-for-bit — including the device hill-climb."""
+    app, m = _app(1), dell_poweredge_1950()
+    v1, f1 = ga_search(app, m, seed=7, params=FAST_DEV)
+    v2, f2 = ga_search(app, m, seed=7, params=FAST_DEV)
+    assert np.array_equal(v1, v2) and f1 == f2
+
+
+def test_device_ga_improves_on_initial_population():
+    import jax
+    import jax.numpy as jnp
+
+    app, m = _app(4), dell_poweredge_1950()
+    # ga_search_device draws its initial population from split(key)[1]
+    k0 = jax.random.split(jax.random.PRNGKey(9))[1]
+    first = jax.random.randint(k0, (FAST_DEV.pop_size, len(app.tasks)),
+                               0, m.n_cores, jnp.int32)
+    init_best = float(population_fitness_device(
+        device_inputs(app, m), first).min())
+    _, val = ga_search(app, m, seed=9, params=FAST_DEV)
+    assert val <= init_best + 1e-6
+
+
+@pytest.mark.parametrize("machine_fn,tasks", [
+    (hp_bl260c, (40, 60)),                          # 64 cores
+    (lambda: cluster_of_multicores(8), (60, 80)),   # 64 cores, 3-level comm
+])
+def test_device_ga_invariant_on_large_machines(machine_fn, tasks):
+    """``ga <= engine`` survives the device routing on the big suites:
+    the winner is re-decoded with the gap-filling host decoder and the
+    result is never worse than the engine baseline."""
+    m = machine_fn()
+    app = generate_app(SynthParams(n_tasks=tasks), 31)
+    eng = get_scheduler("engine")(app, m)
+    par = GAParams(pop_size=12, generations=4, refine_rounds=1,
+                   refine_moves=12, device=True)
+    ga = ga_schedule(app, m, seed=0, params=par)
+    validate(ga, app, m, require_task_coherence=True)
+    assert ga.makespan() <= eng.makespan() + 1e-9
+
+
+@pytest.mark.slow
+def test_device_ga_invariant_on_256_core_cluster():
+    m = cluster_of_multicores(32)                  # 256 cores
+    app = generate_app(SynthParams(n_tasks=(120, 140)), 5)
+    eng = get_scheduler("engine")(app, m)
+    par = GAParams(pop_size=8, generations=3, refine_rounds=1,
+                   refine_moves=8, device=True)
+    ga = ga_schedule(app, m, seed=0, params=par)
+    validate(ga, app, m, require_task_coherence=True)
+    assert ga.makespan() <= eng.makespan() + 1e-9
+
+
+def test_device_ga_respects_release_floors():
+    app, m = _app(6), dell_poweredge_1950()
+    floors = {s: 25.0 for s in range(app.n_subtasks)}
+    sch = ga_schedule(app, m, seed=0, params=FAST_DEV, releases=floors)
+    validate(sch, app, m, require_task_coherence=True)
+    assert min(p.start for p in sch.placements.values()) >= 25.0 - 1e-9
+
+
+@pytest.mark.parametrize("bad", [
+    dict(pop_size=0), dict(elite=13), dict(elite=-1), dict(generations=0),
+    dict(tournament=0), dict(elite_bias=1.5), dict(elite_bias=-0.1),
+    dict(p_mutation=2.0), dict(refine_rounds=-1), dict(backend="torch"),
+])
+def test_gaparams_validated_on_construction(bad):
+    with pytest.raises(ValueError):
+        GAParams(pop_size=12, **bad) if "pop_size" not in bad \
+            else GAParams(**bad)

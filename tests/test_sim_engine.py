@@ -255,11 +255,12 @@ def test_empty_graph_simulates_to_zero_everywhere():
 # lowering dedup: one source of truth
 # ---------------------------------------------------------------------------
 
-def test_engine_comm_matrices_is_lowering_alias():
+def test_engine_comm_matrices_is_deprecated_lowering_alias():
     from repro.core.engine import comm_matrices as engine_cm
     from repro.core.lowering import comm_matrices as lowering_cm
     m = dell_poweredge_1950()
-    lat_e, bw_e = engine_cm(m)
+    with pytest.warns(DeprecationWarning, match="lowering.comm_matrices"):
+        lat_e, bw_e = engine_cm(m)
     lat_l, bw_l = lowering_cm(m)
     assert lat_e is lat_l and bw_e is bw_l      # shared cache, no copy
     lvl = m.comm_level(0, 7)
@@ -267,12 +268,21 @@ def test_engine_comm_matrices_is_lowering_alias():
     assert lat_l[3, 3] == 0.0 and np.isinf(bw_l[3, 3])
 
 
-def test_sched_ref_drain_matrix_is_lowering_alias():
+def test_sched_ref_drain_matrix_is_deprecated_lowering_alias():
     from repro.core.lowering import drain_matrix as lowering_dm
     from repro.kernels.sched_ref import drain_matrix as kernel_dm
     m = heterogeneous_cluster(n_fast=2, n_slow=2)
     gs = [generate_app(SynthParams(n_types=2), seed=i) for i in range(2)]
-    np.testing.assert_array_equal(kernel_dm(gs, m), lowering_dm(gs, m))
+    with pytest.warns(DeprecationWarning, match="lowering.drain_matrix"):
+        deprecated = kernel_dm(gs, m)
+    np.testing.assert_array_equal(deprecated, lowering_dm(gs, m))
+
+
+def test_sched_score_drain_matrix_is_the_lowering_function():
+    # the kernel-facing re-export migrated off the deprecated alias
+    from repro.core.lowering import drain_matrix as lowering_dm
+    from repro.kernels.sched_score import drain_matrix as kernel_dm
+    assert kernel_dm is lowering_dm
 
 
 # ---------------------------------------------------------------------------
