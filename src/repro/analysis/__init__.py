@@ -1,0 +1,35 @@
+# Static analysis: prove every placement the system emits.
+#
+# Three layers, one goal — turn the repo's implicit contracts into
+# named, checkable invariants:
+#   verify   — Schedule/Timeline/SimResult/ScenarioBatch/ClusterState
+#              invariants (overlap, precedence+comm, release floors,
+#              namespaces, transaction journals); rides behind the
+#              `verify=` flag of the registry, simulate_batch/suite,
+#              OnlineAMTHA and RecoveryParams.
+#   ir_lint  — lowered-array contracts (shapes, CSR, waves, padding
+#              sentinels, gather bounds) checked before kernel launch.
+#   lint     — AST rules for the source itself (host-sync in jitted
+#              paths, frozen-dataclass mutation, deprecated APIs);
+#              `python -m repro.analysis.lint` is the CI gate, and
+#              `python -m repro.analysis.verify --quick` the sweep.
+from .ir_lint import (IRLintError, check_gather_bounds, check_shape,
+                      lint_batch, lint_graph_arrays, lint_ir,
+                      lint_machine_arrays, lint_population_arrays,
+                      lint_scenario_arrays)
+from .lint import LintViolation, lint_file, lint_paths, lint_source
+from .verify import (KINDS, VerifyError, Violation, verified_scheduler,
+                     verified_simulator, verify_batch_result,
+                     verify_cluster, verify_schedule, verify_sim_result,
+                     verify_timeline)
+
+__all__ = [
+    "KINDS", "Violation", "VerifyError",
+    "verify_schedule", "verify_timeline", "verify_sim_result",
+    "verify_batch_result", "verify_cluster",
+    "verified_scheduler", "verified_simulator",
+    "IRLintError", "check_gather_bounds", "check_shape", "lint_ir",
+    "lint_machine_arrays", "lint_graph_arrays", "lint_scenario_arrays",
+    "lint_batch", "lint_population_arrays",
+    "LintViolation", "lint_source", "lint_file", "lint_paths",
+]

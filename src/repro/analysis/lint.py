@@ -1,0 +1,269 @@
+"""AST-based repo lint: rules specific to this codebase's hot paths.
+
+Generic linters cannot know that ``kernels.ops`` bodies trace under
+``jax.jit``, that the lowering dataclasses are frozen *contracts* with
+exactly two sanctioned cache-mutation sites, or that
+``engine.comm_matrices`` / ``sched_ref.drain_matrix`` survive only as
+deprecated aliases pinned by tests. This module does. Rules:
+
+* ``host-sync`` — inside a jitted/pallas device scope (a function
+  decorated with ``jax.jit`` / ``functools.partial(jax.jit, ...)``,
+  passed by name to ``jax.jit(...)`` or ``pl.pallas_call(...)``, or
+  nested in one): no host RNG (``np.random``, stdlib ``random``) —
+  it silently re-traces to a constant; no ``.item()`` and no
+  ``float()/int()/bool()`` on a traced parameter — each is a device
+  sync (or a trace error) in the middle of the hot loop.
+* ``frozen-mutation`` — ``object.__setattr__`` (the only way to write
+  a frozen lowering dataclass) outside the sanctioned cache modules.
+* ``deprecated-api`` — importing or calling the deprecated
+  ``engine.comm_matrices`` / ``sched_ref.drain_matrix`` aliases
+  anywhere but their defining modules: new callers use
+  ``core.lowering`` directly.
+
+Suppress a finding by appending ``# lint: <rule>-ok`` to its line
+(rules map to ``deprecated-ok`` / ``sync-ok`` / ``frozen-ok``).
+Runnable as ``python -m repro.analysis.lint`` over ``src/repro``,
+``benchmarks`` and ``tests`` — exit 1 on any violation (the CI gate).
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+__all__ = ["LintViolation", "lint_file", "lint_paths", "lint_source",
+           "main"]
+
+#: deprecated alias -> the module basename that is allowed to define it
+_DEPRECATED = {"comm_matrices": "engine", "drain_matrix": "sched_ref"}
+
+#: modules whose ``object.__setattr__`` cache writes are the sanctioned
+#: mutation sites for frozen lowering/fault containers
+_FROZEN_ALLOW = ("core/lowering.py", "core/sim_engine.py",
+                 "faults/script.py", "search/encoding.py")
+
+_PRAGMA = {"deprecated-api": "deprecated-ok", "host-sync": "sync-ok",
+           "frozen-mutation": "frozen-ok"}
+
+
+@dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    """``a.b.c`` for a Name/Attribute chain, '' for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit(node: ast.AST) -> bool:
+    return _dotted(node) in ("jit", "jax.jit")
+
+
+def _is_partial(node: ast.AST) -> bool:
+    return _dotted(node) in ("partial", "functools.partial")
+
+
+def _device_entry_names(tree: ast.Module) -> set[str]:
+    """Function names turned into device code somewhere in the module:
+    referenced by name in ``jax.jit(f)``, ``pl.pallas_call(f, ...)`` or
+    ``pallas_call(functools.partial(f, ...), ...)``."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or not node.args:
+            continue
+        fn = node.func
+        is_sink = _is_jit(fn) or _dotted(fn) in ("pallas_call",
+                                                 "pl.pallas_call")
+        if not is_sink:
+            continue
+        target = node.args[0]
+        if isinstance(target, ast.Call) and _is_partial(target.func) \
+                and target.args:
+            target = target.args[0]
+        if isinstance(target, ast.Name):
+            names.add(target.id)
+    return names
+
+
+def _is_device_def(fn: ast.FunctionDef, entries: set[str]) -> bool:
+    if fn.name in entries:
+        return True
+    for dec in fn.decorator_list:
+        if _is_jit(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jit(dec.func):
+                return True
+            if _is_partial(dec.func) and dec.args and _is_jit(dec.args[0]):
+                return True
+    return False
+
+
+def _param_names(fn: ast.FunctionDef) -> set[str]:
+    a = fn.args
+    names = {p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def _scan_device_scope(fn: ast.FunctionDef, emit) -> None:
+    """Flag host-sync patterns anywhere inside a device function
+    (nested defs trace into the same computation, so they are scanned
+    too — their parameters join the traced set)."""
+    params: set[str] = set()
+    inner: set[int] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            params |= _param_names(node)
+        elif isinstance(node, ast.Attribute) \
+                and isinstance(node.value, ast.Attribute):
+            inner.add(id(node.value))   # report only the outermost chain
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and id(node) not in inner:
+            chain = _dotted(node)
+            if chain.startswith(("np.random.", "numpy.random.",
+                                 "random.")) or \
+                    chain in ("np.random", "numpy.random"):
+                emit(node.lineno, "host-sync",
+                     f"host RNG `{chain}` inside jitted `{fn.name}` — "
+                     f"it traces to a constant; use jax.random keys")
+        elif isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "item" and not node.args:
+                emit(node.lineno, "host-sync",
+                     f"`.item()` inside jitted `{fn.name}` — a device "
+                     f"sync in the traced path")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("float", "int", "bool") \
+                    and node.args and isinstance(node.args[0], ast.Name) \
+                    and node.args[0].id in params:
+                emit(node.lineno, "host-sync",
+                     f"`{node.func.id}({node.args[0].id})` on a traced "
+                     f"parameter inside jitted `{fn.name}` — a device "
+                     f"sync / trace error")
+
+
+def lint_source(src: str, path: str = "<memory>") -> list[LintViolation]:
+    """Lint one module's source. ``path`` scopes the per-module
+    allowlists (deprecated-alias definers, sanctioned cache modules)."""
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintViolation(path, e.lineno or 0, "syntax",
+                              f"unparseable: {e.msg}")]
+    lines = src.splitlines()
+    norm = path.replace("\\", "/")
+    out: list[LintViolation] = []
+
+    def emit(line: int, rule: str, message: str) -> None:
+        text = lines[line - 1] if 0 < line <= len(lines) else ""
+        if f"# lint: {_PRAGMA.get(rule, 'ok')}" in text:
+            return
+        out.append(LintViolation(path, line, rule, message))
+
+    # --- deprecated-api -------------------------------------------------
+    stem = Path(norm).stem
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = (node.module or "").rsplit(".", 1)[-1]
+            for alias in node.names:
+                definer = _DEPRECATED.get(alias.name)
+                if definer and mod == definer and stem != definer:
+                    emit(node.lineno, "deprecated-api",
+                         f"import of deprecated `{definer}."
+                         f"{alias.name}` — use core.lowering")
+        elif isinstance(node, ast.Attribute):
+            definer = _DEPRECATED.get(node.attr)
+            if definer and _dotted(node.value).rsplit(".", 1)[-1] \
+                    == definer and stem != definer:
+                emit(node.lineno, "deprecated-api",
+                     f"use of deprecated `{definer}.{node.attr}` — "
+                     f"use core.lowering")
+
+    # --- frozen-mutation ------------------------------------------------
+    if not norm.endswith(_FROZEN_ALLOW):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and _dotted(node.func) == "object.__setattr__":
+                emit(node.lineno, "frozen-mutation",
+                     "`object.__setattr__` outside the sanctioned cache"
+                     " modules — frozen lowering contracts are "
+                     "immutable")
+
+    # --- host-sync ------------------------------------------------------
+    entries = _device_entry_names(tree)
+    device_fns: list[ast.FunctionDef] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef) \
+                and _is_device_def(node, entries):
+            device_fns.append(node)
+    # a kernel def nested in a jitted fn is already covered by the
+    # enclosing scan — skip it to avoid duplicate findings
+    nested: set[int] = set()
+    for fn in device_fns:
+        for node in ast.walk(fn):
+            if node is not fn and isinstance(node, ast.FunctionDef):
+                nested.add(id(node))
+    for fn in device_fns:
+        if id(fn) not in nested:
+            _scan_device_scope(fn, emit)
+    return out
+
+
+def lint_file(path: Path) -> list[LintViolation]:
+    return lint_source(path.read_text(), str(path))
+
+
+def lint_paths(paths) -> list[LintViolation]:
+    out: list[LintViolation] = []
+    for root in paths:
+        root = Path(root)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            out.extend(lint_file(f))
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    repo = Path(__file__).resolve().parents[3]
+    ap = argparse.ArgumentParser(
+        description="repo-specific AST lint (host-sync, frozen-mutation,"
+                    " deprecated-api)")
+    ap.add_argument("paths", nargs="*",
+                    default=[repo / "src" / "repro", repo / "benchmarks",
+                             repo / "tests"],
+                    help="files or directories (default: the repo)")
+    args = ap.parse_args(argv)
+    violations = lint_paths(args.paths)
+    for v in violations:
+        print(v)
+    n_files = sum(len(sorted(Path(p).rglob('*.py')))
+                  if Path(p).is_dir() else 1 for p in args.paths)
+    print(f"{len(violations)} violation(s) in {n_files} files",
+          file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

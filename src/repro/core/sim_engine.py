@@ -489,7 +489,8 @@ def _jitter_durations(batch: ScenarioBatch, jitter: float,
 
 def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
                    jitter: float = 0.0, seeds=None,
-                   backend: str = "numpy") -> BatchSimResult:
+                   backend: str = "numpy",
+                   verify: bool = False) -> BatchSimResult:
     """Evaluate every scenario of the batch in one fixed-shape call.
 
     ``seeds`` — one jitter seed per scenario (default ``range(B)``);
@@ -497,10 +498,16 @@ def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
     sid order rather than event order (statistically identical).
     ``backend="pallas"`` runs the sparse ``sim_relax_pop`` kernel on
     padded predecessor gathers in float32 (falls back to NumPy when JAX
-    is unavailable).
+    is unavailable). ``verify=True`` lints the lowered batch before the
+    sweep and proves the result after it (``repro.analysis``): padding,
+    release floors, in-order + dependency edges incl. comm lag, fault
+    stranding propagation, recomputed makespans.
     """
     if not isinstance(batch, ScenarioBatch):
         batch = batch_scenarios(batch)
+    if verify:
+        from ..analysis.ir_lint import lint_batch
+        lint_batch(batch)
     dur = _jitter_durations(batch, jitter, seeds)
     if batch.has_faults:
         # the fault semantics live only in the NumPy wave path; the
@@ -521,8 +528,16 @@ def simulate_batch(batch: ScenarioBatch | list[ScenarioArrays], *,
     # the work that finished, like SimResult under faults
     t_exec = np.where(np.isfinite(masked), masked, 0.0).max(axis=1,
                                                             initial=0.0)
-    return BatchSimResult(t_exec=t_exec, subtask_end=masked,
-                          t_est=batch.t_est, n_sub=batch.n_sub)
+    result = BatchSimResult(t_exec=t_exec, subtask_end=masked,
+                            t_est=batch.t_est, n_sub=batch.n_sub)
+    if verify:
+        from ..analysis.verify import verify_batch_result
+        # float32 pallas sweeps round each relax step; 1e-5 absorbs the
+        # accumulated ulps, f64 paths get the validator's 1e-9
+        rtol = 1e-5 if backend == "pallas" and not batch.has_faults \
+            else 1e-9
+        verify_batch_result(batch, result, duration=dur, rtol=rtol)
+    return result
 
 
 def _pop_gather_inputs(batch: ScenarioBatch):
@@ -558,7 +573,8 @@ def simulate_suite(graphs: list[AppGraph], machines, schedules, *,
                    jitter: float = 0.0, seeds=None,
                    releases: list[dict[int, float] | None] | None = None,
                    faults=None,
-                   backend: str = "numpy") -> BatchSimResult:
+                   backend: str = "numpy",
+                   verify: bool = False) -> BatchSimResult:
     """Convenience wrapper: lower ``(graph, machine, schedule)`` triples
     and evaluate them in one batched call. ``machines`` may be a single
     machine (shared by every scenario) or one per graph; ``faults`` a
@@ -579,4 +595,4 @@ def simulate_suite(graphs: list[AppGraph], machines, schedules, *,
                  for g, m, s, r, f in zip(graphs, machines, schedules,
                                           rel, faults)]
     return simulate_batch(scenarios, jitter=jitter, seeds=seeds,
-                          backend=backend)
+                          backend=backend, verify=verify)

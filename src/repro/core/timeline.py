@@ -32,6 +32,7 @@ and the bisect shortcut exact.
 from __future__ import annotations
 
 from bisect import bisect_right
+from contextlib import contextmanager
 
 from .schedule import Placement, Schedule
 
@@ -157,6 +158,25 @@ class Timeline:
     @property
     def in_transaction(self) -> bool:
         return bool(self._journal)
+
+    @contextmanager
+    def transaction(self, commit: bool = True):
+        """Structural transaction: ``with tl.transaction(): ...`` makes
+        rollback-on-exception impossible to forget — the journal always
+        closes, whatever the body raises. ``commit=False`` is the
+        what-if shape (``predict``): run the body against the live
+        timeline, read the outcome inside the block, rewind on exit."""
+        self.begin()
+        try:
+            yield self
+        except BaseException:
+            self.rollback()
+            raise
+        else:
+            if commit:
+                self.commit()
+            else:
+                self.rollback()
 
     # ---- horizon compaction -------------------------------------------
     def compact(self, retire, remap=None) -> dict[int, Placement]:

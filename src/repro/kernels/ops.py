@@ -1,12 +1,22 @@
 """jit'd public wrappers for the Pallas kernels.
 
 ``interpret`` defaults to True off-TPU so the same call sites work in CPU
-tests and on real hardware (where the compiled Mosaic path runs)."""
+tests and on real hardware (where the compiled Mosaic path runs).
+
+The scheduling kernels (``sched_score`` / ``sim_step`` / ``sim_relax`` /
+``sim_relax_pop``) gather through caller-provided index arrays; an
+out-of-bounds index does not crash on device, it clamps and reads the
+wrong slot, returning a plausible wrong score. Their wrappers therefore
+run the tracer-safe checks from :mod:`repro.analysis.ir_lint` before
+launch: shapes always (static metadata even under ``jax.jit`` tracing —
+the device GA calls ``sim_relax_pop`` inside its jitted generation
+step), index-range checks whenever the operands are concrete."""
 
 from __future__ import annotations
 
 import jax
 
+from ..analysis.ir_lint import check_gather_bounds, check_shape
 from . import flash_attention as _fa
 from . import flash_decode as _fd
 from . import rmsnorm as _rn
@@ -38,23 +48,44 @@ def ssd_scan(x, dt, A, B, C, chunk=256):
 
 def sched_score(drain, frontiers, release, *, apps_block=128,
                 cores_block=128):
+    a, c = drain.shape
+    check_shape("sched_score.frontiers", frontiers, (c,))
+    check_shape("sched_score.release", release, (a,))
     return _ss.sched_score(drain, frontiers, release,
                            apps_block=apps_block, cores_block=cores_block,
                            interpret=not _on_tpu())
 
 
 def sim_step(end, lat, volbw, duration, release, *, sub_block=128):
+    b, s = end.shape
+    check_shape("sim_step.lat", lat, (b, s, s))
+    check_shape("sim_step.volbw", volbw, (b, s, s))
+    check_shape("sim_step.duration", duration, (b, s))
+    check_shape("sim_step.release", release, (b, s))
     return _sim.sim_step(end, lat, volbw, duration, release,
                          sub_block=sub_block, interpret=not _on_tpu())
 
 
 def sim_relax(lat, volbw, duration, release, *, n_steps, sub_block=128):
+    b, s, _ = lat.shape
+    check_shape("sim_relax.lat", lat, (b, s, s))
+    check_shape("sim_relax.volbw", volbw, (b, s, s))
+    check_shape("sim_relax.duration", duration, (b, s))
+    check_shape("sim_relax.release", release, (b, s))
     return _sim.sim_relax(lat, volbw, duration, release, n_steps=n_steps,
                           sub_block=sub_block, interpret=not _on_tpu())
 
 
 def sim_relax_pop(pred, lat, volbw, duration, release, *, n_steps,
                   sub_block=128):
+    b, s, p1 = pred.shape
+    check_shape("sim_relax_pop.lat", lat, (b, s, p1))
+    check_shape("sim_relax_pop.volbw", volbw, (b, s, p1))
+    check_shape("sim_relax_pop.duration", duration, (b, s))
+    check_shape("sim_relax_pop.release", release, (b, s))
+    # the kernel gathers end[pred] from an (S+1)-slot buffer whose last
+    # slot is the zero sentinel; anything past it reads garbage
+    check_gather_bounds(pred, s, "sim_relax_pop.pred")
     return _sim.sim_relax_pop(pred, lat, volbw, duration, release,
                               n_steps=n_steps, sub_block=sub_block,
                               interpret=not _on_tpu())

@@ -39,7 +39,7 @@ class OnlineAMTHA:
 
     def __init__(self, machine: MachineModel, use_engine: bool = True,
                  ga_refine: bool = False, ga_seed: int = 0,
-                 ga_params=None):
+                 ga_params=None, verify: bool = False):
         self.machine = machine
         self.state = ClusterState(machine)
         self.use_engine = use_engine
@@ -47,6 +47,11 @@ class OnlineAMTHA:
         self.ga_refine = ga_refine
         self.ga_seed = ga_seed
         self.ga_params = ga_params
+        # proof-check the whole cluster after every committed admission
+        # (repro.analysis.verify_cluster); off by default — it is O(all
+        # live work), the per-admission cost the transaction design
+        # exists to avoid, so it is a debug/CI switch, not a default
+        self.verify = verify
 
     # ------------------------------------------------------------------
     def predict(self, arrival: AppArrival, at: float | None = None) -> float:
@@ -64,12 +69,10 @@ class OnlineAMTHA:
             # constructor validates before the transaction opens
             eng = ArrayAMTHA(arrival.graph, self.machine, warm_start=tl,
                              release_time=release, sid_offset=off)
-            tl.begin()
-            try:
+            # commit=False: a what-if always rewinds, success included
+            with tl.transaction(commit=False):
                 eng.run()
                 return max(tl.placements[off + s].end for s in range(n))
-            finally:
-                tl.rollback()
         trial = self.state.schedule.copy()
         AMTHA(arrival.graph, self.machine, warm_start=trial,
               release_time=release, sid_offset=off).run()
@@ -93,13 +96,8 @@ class OnlineAMTHA:
             tl = self.state.schedule
             eng = ArrayAMTHA(arrival.graph, self.machine, warm_start=tl,
                              release_time=release, sid_offset=off)
-            tl.begin()
-            try:
+            with tl.transaction():
                 eng.run()
-            except BaseException:
-                tl.rollback()
-                raise
-            tl.commit()
         else:
             trial = self.state.schedule.copy()
             AMTHA(arrival.graph, self.machine, warm_start=trial,
@@ -110,6 +108,9 @@ class OnlineAMTHA:
         admitted = self.state.commit(arrival, off, t_admit=t)
         if self.ga_refine and self._can_refine():
             self.refine_ga(seed=self.ga_seed, params=self.ga_params)
+        if self.verify:
+            from ..analysis.verify import verify_cluster
+            verify_cluster(self.state)
         return admitted
 
     def _can_refine(self) -> bool:

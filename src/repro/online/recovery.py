@@ -54,6 +54,9 @@ class RecoveryParams:
     ga_refine: bool = False         # polish with the frozen GA pass
     ga_seed: int = 0
     ga_params: object = None
+    # prove the committed plan with repro.analysis.verify_cluster after
+    # the pass completes (post-shed/-refine, so namespaces are settled)
+    verify: bool = False
 
 
 @dataclass
@@ -309,27 +312,29 @@ def recover(engine: OnlineAMTHA, det: Detection,
     while True:
         last_chance = (attempt >= par.max_retries
                        and shed_tier_i >= len(tiers) - 1)
-        tl.begin()
+        # the shed set reads only pre-transaction placements, so it is
+        # computed before the journal opens (a failed attempt rewinds
+        # to exactly this view anyway)
+        shed_apps = []
+        for i in range(shed_tier_i):
+            shed_apps.extend(sheddable(tiers[i]))
+        shed_sids = {s for a in shed_apps for s in a.global_sids()}
         try:
-            shed_apps = []
-            for i in range(shed_tier_i):
-                shed_apps.extend(sheddable(tiers[i]))
-            shed_sids = {s for a in shed_apps for s in a.global_sids()}
-            for sid in sorted(rollback | shed_sids):
-                if sid in tl.placements:
-                    tl.remove(sid)
-            _replace_greedy(state, rollback - shed_sids, det,
-                            floor=det.at + delay)
-            if not last_chance and not _tier_deadlines_ok(
-                    state, protect_tier):
-                raise RecoveryError(
-                    f"tier {protect_tier} misses deadlines")
-            tl.commit()
+            with tl.transaction():
+                for sid in sorted(rollback | shed_sids):
+                    if sid in tl.placements:
+                        tl.remove(sid)
+                _replace_greedy(state, rollback - shed_sids, det,
+                                floor=det.at + delay)
+                if not last_chance and not _tier_deadlines_ok(
+                        state, protect_tier):
+                    raise RecoveryError(
+                        f"tier {protect_tier} misses deadlines")
             report.n_replaced = len(rollback - shed_sids)
             shed_ids = [a.app_id for a in shed_apps]
             break
         except ScheduleError as err:
-            tl.rollback()
+            # the transaction context manager already rolled back
             if last_chance:
                 raise               # structurally unrecoverable (no cores)
             report.notes.append(f"attempt {attempt}: {err}")
@@ -348,6 +353,12 @@ def recover(engine: OnlineAMTHA, det: Detection,
         a.t_est_finish = max(tl.placements[s].end for s in a.global_sids())
     if par.ga_refine and engine._can_refine():
         engine.refine_ga(seed=par.ga_seed, params=par.ga_params)
+    if par.verify:
+        # after drop_apps/_rebase: mid-pass the shed sids are off the
+        # timeline while their apps still hold the namespace, which is
+        # exactly the transient the verifier would (rightly) reject
+        from ..analysis.verify import verify_cluster
+        verify_cluster(state)
     report.new_makespan = state.schedule.makespan()
     return report
 

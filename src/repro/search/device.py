@@ -90,6 +90,11 @@ def device_inputs(graph: AppGraph, machine: MachineModel, *,
     every generation, shipped to device. ``releases`` (sid -> floor)
     folds into a per-subtask floor vector like the host lowering."""
     pa = lowering.population_arrays(graph, machine)
+    # prove the decode-gather contracts (topo permutation, pred-pos
+    # bounds) once per (graph, machine) — the jitted generation step
+    # gathers through these arrays blindly for every candidate after
+    from ..analysis.ir_lint import lint_population_arrays
+    lint_population_arrays(pa)
     rel = np.zeros(pa.n_subtasks, np.float32)
     if releases:
         for sid, t in releases.items():

@@ -256,7 +256,7 @@ def test_empty_graph_simulates_to_zero_everywhere():
 # ---------------------------------------------------------------------------
 
 def test_engine_comm_matrices_is_deprecated_lowering_alias():
-    from repro.core.engine import comm_matrices as engine_cm
+    from repro.core.engine import comm_matrices as engine_cm  # lint: deprecated-ok
     from repro.core.lowering import comm_matrices as lowering_cm
     m = dell_poweredge_1950()
     with pytest.warns(DeprecationWarning, match="lowering.comm_matrices"):
@@ -270,7 +270,7 @@ def test_engine_comm_matrices_is_deprecated_lowering_alias():
 
 def test_sched_ref_drain_matrix_is_deprecated_lowering_alias():
     from repro.core.lowering import drain_matrix as lowering_dm
-    from repro.kernels.sched_ref import drain_matrix as kernel_dm
+    from repro.kernels.sched_ref import drain_matrix as kernel_dm  # lint: deprecated-ok
     m = heterogeneous_cluster(n_fast=2, n_slow=2)
     gs = [generate_app(SynthParams(n_types=2), seed=i) for i in range(2)]
     with pytest.warns(DeprecationWarning, match="lowering.drain_matrix"):

@@ -146,3 +146,50 @@ def test_schedule_extend_sorted_matches_place():
         ref.place(*it)
     assert bulk.core_slots == ref.core_slots
     assert bulk.placements == ref.placements
+
+
+# ---------------------------------------------------------------------------
+# the transaction() context manager (analysis PR satellite)
+# ---------------------------------------------------------------------------
+
+def test_transaction_cm_commits_on_success():
+    tl = Timeline(2)
+    with tl.transaction():
+        tl.place(0, 0, 0.0, 1.0)
+    assert not tl.in_transaction
+    assert 0 in tl.placements
+    assert tl.core_available(0) == 1.0
+
+
+def test_transaction_cm_rolls_back_on_exception():
+    _, tl = random_busy_pair(5)
+    before = dict(tl.placements)
+    with pytest.raises(RuntimeError, match="boom"):
+        with tl.transaction():
+            tl.place(10_000, 0, 500.0, 501.0)
+            raise RuntimeError("boom")
+    assert not tl.in_transaction
+    assert tl.placements == before
+
+
+def test_transaction_cm_what_if_rewinds_on_success():
+    _, tl = random_busy_pair(6)
+    before_slots = tl.core_slots
+    before = dict(tl.placements)
+    with tl.transaction(commit=False):      # the predict() pattern
+        tl.place(10_000, 1, 500.0, 501.0)
+        assert 10_000 in tl.placements
+    assert not tl.in_transaction
+    assert tl.placements == before
+    assert tl.core_slots == before_slots
+
+
+def test_transaction_cm_nests_inside_open_journal():
+    tl = Timeline(2)
+    tl.begin()
+    tl.place(0, 0, 0.0, 1.0)
+    with tl.transaction():                  # nested commit folds upward
+        tl.place(1, 1, 0.0, 1.0)
+    assert tl.in_transaction
+    tl.rollback()                           # outer rollback takes both
+    assert tl.placements == {}
