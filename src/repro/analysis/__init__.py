@@ -10,14 +10,23 @@
 #   ir_lint  — lowered-array contracts (shapes, CSR, waves, padding
 #              sentinels, gather bounds) checked before kernel launch.
 #   lint     — AST rules for the source itself (host-sync in jitted
-#              paths, frozen-dataclass mutation, deprecated APIs);
-#              `python -m repro.analysis.lint` is the CI gate, and
-#              `python -m repro.analysis.verify --quick` the sweep.
+#              paths, frozen-dataclass mutation, deprecated APIs,
+#              dtype promotion); `python -m repro.analysis.lint` is the
+#              CI gate, and `python -m repro.analysis.verify --quick`
+#              the sweep.
+#   tracecheck — jaxpr/HLO analysis of every compiled entry point in
+#              the entrypoints manifest (retrace, host-sync after
+#              inlining, baked consts, dtype drift, cost cross-check);
+#              `python -m repro.analysis.tracecheck --quick` gates CI.
+from .entrypoints import (MANIFEST, Built, CostRef, EntryPoint, manifest,
+                          register_entrypoint)
 from .ir_lint import (IRLintError, check_gather_bounds, check_shape,
                       lint_batch, lint_graph_arrays, lint_ir,
                       lint_machine_arrays, lint_population_arrays,
                       lint_scenario_arrays)
 from .lint import LintViolation, lint_file, lint_paths, lint_source
+from .tracecheck import (EntryReport, assert_clean, run_tracecheck,
+                         trace_entry)
 from .verify import (KINDS, VerifyError, Violation, verified_scheduler,
                      verified_simulator, verify_batch_result,
                      verify_cluster, verify_schedule, verify_sim_result,
@@ -32,4 +41,7 @@ __all__ = [
     "lint_machine_arrays", "lint_graph_arrays", "lint_scenario_arrays",
     "lint_batch", "lint_population_arrays",
     "LintViolation", "lint_source", "lint_file", "lint_paths",
+    "Built", "CostRef", "EntryPoint", "MANIFEST", "manifest",
+    "register_entrypoint",
+    "EntryReport", "assert_clean", "run_tracecheck", "trace_entry",
 ]

@@ -19,9 +19,17 @@ deprecated aliases pinned by tests. This module does. Rules:
   ``engine.comm_matrices`` / ``sched_ref.drain_matrix`` aliases
   anywhere but their defining modules: new callers use
   ``core.lowering`` directly.
+* ``dtype-promotion`` — inside a device scope: ``np.float64`` /
+  ``np.double`` literals (strong-typed scalars that silently widen
+  bf16/f32 math), explicit ``dtype=float64`` requests, and host-NumPy
+  array constructors without a ``dtype=`` (their float64 default bakes
+  a double-precision constant into the trace). The jaxpr-level twin
+  of this rule lives in :mod:`repro.analysis.tracecheck` (pass 4) —
+  this one fires at review time, that one after inlining.
 
 Suppress a finding by appending ``# lint: <rule>-ok`` to its line
-(rules map to ``deprecated-ok`` / ``sync-ok`` / ``frozen-ok``).
+(rules map to ``deprecated-ok`` / ``sync-ok`` / ``frozen-ok`` /
+``dtype-ok``).
 Runnable as ``python -m repro.analysis.lint`` over ``src/repro``,
 ``benchmarks`` and ``tests`` — exit 1 on any violation (the CI gate).
 """
@@ -45,7 +53,29 @@ _FROZEN_ALLOW = ("core/lowering.py", "core/sim_engine.py",
                  "faults/script.py", "search/encoding.py")
 
 _PRAGMA = {"deprecated-api": "deprecated-ok", "host-sync": "sync-ok",
-           "frozen-mutation": "frozen-ok"}
+           "frozen-mutation": "frozen-ok",
+           "dtype-promotion": "dtype-ok"}
+
+#: strong-typed f64 scalar constructors — one of these in a jitted body
+#: widens every float it touches (numpy scalars are not weak-typed)
+_F64_CTORS = ("np.float64", "numpy.float64", "np.double", "numpy.double")
+
+#: host-NumPy constructors whose dtype defaults to float64
+_NP_DEFAULT_F64 = ("np.array", "np.asarray", "np.full", "np.ones",
+                   "np.zeros", "np.empty", "np.arange", "np.linspace",
+                   "numpy.array", "numpy.asarray", "numpy.full",
+                   "numpy.ones", "numpy.zeros", "numpy.empty",
+                   "numpy.arange", "numpy.linspace")
+
+
+def _is_f64_dtype_value(node: ast.AST) -> bool:
+    """``np.float64`` / ``jnp.float64`` / ``"float64"`` / ``"double"``
+    as a dtype= value."""
+    if isinstance(node, ast.Constant):
+        return node.value in ("float64", "double", "complex128")
+    return _dotted(node) in _F64_CTORS + ("jnp.float64", "jax.numpy.float64",
+                                          "np.complex128",
+                                          "numpy.complex128")
 
 
 @dataclass(frozen=True)
@@ -160,6 +190,24 @@ def _scan_device_scope(fn: ast.FunctionDef, emit) -> None:
                      f"`{node.func.id}({node.args[0].id})` on a traced "
                      f"parameter inside jitted `{fn.name}` — a device "
                      f"sync / trace error")
+            chain = _dotted(node.func)
+            if chain in _F64_CTORS:
+                emit(node.lineno, "dtype-promotion",
+                     f"`{chain}(...)` inside jitted `{fn.name}` — a "
+                     f"strong f64 scalar that widens every float it "
+                     f"touches; use a Python float (weak) or jnp.float32")
+            elif chain in _NP_DEFAULT_F64 \
+                    and not any(kw.arg == "dtype" for kw in node.keywords):
+                emit(node.lineno, "dtype-promotion",
+                     f"`{chain}(...)` without dtype= inside jitted "
+                     f"`{fn.name}` — host NumPy defaults to float64 and "
+                     f"bakes a double-precision constant into the trace")
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_f64_dtype_value(kw.value):
+                    emit(node.lineno, "dtype-promotion",
+                         f"explicit float64 dtype inside jitted "
+                         f"`{fn.name}` — accidental x64 in a f32/bf16 "
+                         f"hot path")
 
 
 def lint_source(src: str, path: str = "<memory>") -> list[LintViolation]:

@@ -1,0 +1,482 @@
+"""Jaxpr/HLO-level static analysis of every compiled hot path.
+
+``analysis.verify`` proves the *schedules* the system emits;
+``analysis.lint`` reads the *source*. This module closes the gap in
+between: the compiled programs themselves. For every entry point in
+:mod:`repro.analysis.entrypoints` it traces the ClosedJaxpr (and,
+where affordable, the compiled HLO) and runs five passes:
+
+1. **retrace** — call the jitted callable across a canned sweep of
+   same-shape/different-value arguments and watch its trace-cache
+   size: growth means jit is keying on values (a host round trip and a
+   recompile per call, the death of the hot loop).
+2. **host-sync** — walk every eqn (recursing into scan/while/cond/
+   pjit/pallas sub-jaxprs) for callback-family primitives
+   (``pure_callback`` / ``io_callback`` / ``debug_callback``, infeed/
+   outfeed): syncs that only appear after inlining, where the AST rule
+   of ``analysis.lint`` cannot see them.
+3. **baked-const** — arrays above the entry's size threshold captured
+   as jaxpr consts instead of arguments (the classic "closed over the
+   population" bug: correct numbers, one baked operand, zero reuse).
+4. **dtype** — float64/complex128 avals anywhere (accidental x64
+   drift), and widening ``convert_element_type`` on float arrays
+   (np-scalar strong-type promotion sneaking f32 math into a bf16
+   model) unless the entry declares its upcasts deliberate.
+5. **cost** — dot FLOPs summed from the jaxpr (scan-length aware) and
+   from the compiled HLO (:func:`repro.launch.hlo_analysis
+   .analyze_module`), cross-checked against the entry's
+   ``autoplace/costs.py`` roofline reference within its stated ratio
+   bounds, and appended to ``BENCH_tracecheck.json`` so cost-model
+   drift is a CI-visible regression (the measured-vs-modeled loop the
+   AMTHA evaluation closes by hand).
+
+Findings are :class:`repro.analysis.verify.Violation` values with this
+module's own ``KINDS``; a failing sweep raises
+:class:`~repro.analysis.verify.VerifyError`.
+``python -m repro.analysis.tracecheck --quick`` (first suite of every
+manifest entry) is the CI gate.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Optional
+
+from .entrypoints import Built, CostRef, EntryPoint, manifest
+from .verify import VerifyError, Violation
+
+__all__ = ["KINDS", "EntryReport", "assert_clean", "check_baked_consts",
+           "check_costs", "check_dtypes", "check_host_sync",
+           "check_retrace", "jaxpr_dot_flops", "main", "run_tracecheck",
+           "trace_entry"]
+
+#: the closed set of violation kinds this analyzer emits
+KINDS = ("retrace", "host-sync", "baked-const", "dtype", "cost-model")
+
+#: primitives that round-trip through the host mid-computation
+_SYNC_PRIMS = frozenset({"pure_callback", "io_callback", "debug_callback",
+                         "callback", "infeed", "outfeed"})
+
+
+# ---------------------------------------------------------------------------
+# jaxpr plumbing
+# ---------------------------------------------------------------------------
+
+def _jaxpr_types():
+    try:
+        from jax.extend.core import ClosedJaxpr, Jaxpr
+    except ImportError:                       # pragma: no cover - old jax
+        from jax.core import ClosedJaxpr, Jaxpr
+    return ClosedJaxpr, Jaxpr
+
+
+def _as_jaxprs(v) -> list:
+    """Raw Jaxprs inside one eqn param value (ClosedJaxpr, Jaxpr, or
+    lists thereof — covers pjit/scan/while/cond/pallas params)."""
+    ClosedJaxpr, Jaxpr = _jaxpr_types()
+    if isinstance(v, ClosedJaxpr):
+        return [v.jaxpr]
+    if isinstance(v, Jaxpr):
+        return [v]
+    if isinstance(v, (list, tuple)):
+        return [j for x in v for j in _as_jaxprs(x)]
+    return []
+
+
+def _walk_eqns(jaxpr, mult: float = 1.0):
+    """Yield ``(eqn, multiplicity)`` over a jaxpr and every nested
+    jaxpr. ``scan`` scales its body by the static trip count; ``while``
+    bodies count once (trip count is not static — the HLO side carries
+    the honest number there)."""
+    for eqn in jaxpr.eqns:
+        yield eqn, mult
+        m = mult
+        if eqn.primitive.name == "scan":
+            m = mult * float(eqn.params.get("length", 1))
+        for sub in _sub_jaxprs(eqn):
+            yield from _walk_eqns(sub, m)
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        yield from _as_jaxprs(v)
+
+
+def _closed_jaxprs(closed):
+    """Every ClosedJaxpr reachable from ``closed`` (itself included) —
+    each carries its own ``consts`` list."""
+    ClosedJaxpr, _ = _jaxpr_types()
+    out, stack = [closed], [closed.jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            for v in eqn.params.values():
+                vs = v if isinstance(v, (list, tuple)) else [v]
+                for x in vs:
+                    if isinstance(x, ClosedJaxpr):
+                        out.append(x)
+                        stack.append(x.jaxpr)
+                    else:
+                        for sub in _as_jaxprs(x):
+                            stack.append(sub)
+    return out
+
+
+def _where(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+        return source_info_util.summarize(eqn.source_info)
+    except Exception:                         # pragma: no cover - jax drift
+        return "?"
+
+
+def _trace(built: Built):
+    """The entry's ClosedJaxpr (works for concrete and abstract args;
+    pre-jitted callables trace through their pjit wrapper)."""
+    import jax
+    return jax.make_jaxpr(built.fn, static_argnums=built.static_argnums)(
+        *built.args)
+
+
+# ---------------------------------------------------------------------------
+# pass 1: recompilation detector
+# ---------------------------------------------------------------------------
+
+def check_retrace(built: Built, entry: str
+                  ) -> tuple[Optional[int], list[Violation]]:
+    """Call the jitted entry across its sweep and count cache growth.
+    Returns ``(n_retraces, violations)`` — ``None`` when the entry is
+    abstract, has no sweep, or jax exposes no cache counter."""
+    import jax
+    if built.abstract or not built.sweep:
+        return None, []
+    if built.jfn is not None:
+        jfn = built.jfn
+    else:
+        # a fresh wrapper identity per check: jax.jit(fn) shares its
+        # trace cache across calls for the same `fn` object, so a
+        # previously-warmed cache would mask the retraces
+        fn = built.fn
+        jfn = jax.jit(lambda *a: fn(*a),
+                      static_argnums=built.static_argnums)
+    cache_size = getattr(jfn, "_cache_size", None)
+    if cache_size is None:                    # pragma: no cover - jax drift
+        return None, []
+    jfn(*built.args)
+    base = cache_size()
+    retraces = 0
+    for alt in built.sweep:
+        jfn(*alt)
+        now = cache_size()
+        if now > base:
+            retraces += now - base
+            base = now
+    if not retraces:
+        return 0, []
+    return retraces, [Violation(
+        "retrace",
+        f"{entry}: {retraces} retrace(s) across {len(built.sweep)} "
+        f"same-shape call(s) — jit keys on argument values "
+        f"(static_argnums or host branching on data)")]
+
+
+# ---------------------------------------------------------------------------
+# pass 2: host-sync detector
+# ---------------------------------------------------------------------------
+
+def check_host_sync(closed, entry: str) -> list[Violation]:
+    out = []
+    for eqn, _ in _walk_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if name in _SYNC_PRIMS:
+            out.append(Violation(
+                "host-sync",
+                f"{entry}: `{name}` at {_where(eqn)} — a host round "
+                f"trip inside the compiled program"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 3: baked-constant detector
+# ---------------------------------------------------------------------------
+
+def check_baked_consts(closed, entry: str,
+                       limit: int = 64 * 1024) -> list[Violation]:
+    import numpy as np
+    out = []
+    for cj in _closed_jaxprs(closed):
+        for var, const in zip(cj.jaxpr.constvars, cj.consts):
+            nbytes = getattr(const, "nbytes", None)
+            if nbytes is None:
+                try:
+                    nbytes = np.asarray(const).nbytes
+                except Exception:
+                    continue
+            if nbytes >= limit:
+                shape = tuple(getattr(const, "shape", ()))
+                out.append(Violation(
+                    "baked-const",
+                    f"{entry}: {nbytes} B constant {shape} "
+                    f"{getattr(var.aval, 'str_short', lambda: '')()} baked "
+                    f"into the jaxpr (limit {limit} B) — pass it as an "
+                    f"argument so the trace is reusable"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 4: dtype-promotion lint
+# ---------------------------------------------------------------------------
+
+def check_dtypes(closed, entry: str, *, allow_f64: bool = False,
+                 allow_upcast: bool = False) -> list[Violation]:
+    import numpy as np
+    out, seen = [], set()
+
+    def f64(aval, ctx):
+        dt = getattr(aval, "dtype", None)
+        if dt is None or allow_f64:
+            return
+        if dt in (np.float64, np.complex128) and ctx not in seen:
+            seen.add(ctx)
+            out.append(Violation(
+                "dtype", f"{entry}: {np.dtype(dt).name} value at {ctx} — "
+                         f"accidental x64 in a f32/bf16 program"))
+
+    for i, var in enumerate(closed.jaxpr.invars):
+        f64(var.aval, f"input {i}")
+    for eqn, _ in _walk_eqns(closed.jaxpr):
+        for var in eqn.outvars:
+            f64(var.aval, f"`{eqn.primitive.name}` at {_where(eqn)}")
+        if eqn.primitive.name != "convert_element_type" or allow_upcast:
+            continue
+        src = getattr(eqn.invars[0], "aval", None)
+        dst = np.dtype(eqn.params.get("new_dtype"))
+        if src is None or not hasattr(src, "dtype"):
+            continue
+        import jax.numpy as jnp
+        sdt = np.dtype(src.dtype)
+        # jnp.issubdtype, not np: bfloat16 is an ml_dtypes extension
+        # type that numpy does not class under np.floating
+        widening = (jnp.issubdtype(sdt, jnp.floating)
+                    and jnp.issubdtype(dst, jnp.floating)
+                    and getattr(src, "ndim", 0) >= 1
+                    and dst.itemsize > sdt.itemsize)
+        ctx = f"upcast at {_where(eqn)}"
+        if widening and ctx not in seen:
+            seen.add(ctx)
+            out.append(Violation(
+                "dtype",
+                f"{entry}: float array widened {sdt.name} -> {dst.name} "
+                f"at {_where(eqn)} — strong-scalar promotion or stray "
+                f"astype in the hot path"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# pass 5: static cost extraction + roofline cross-check
+# ---------------------------------------------------------------------------
+
+def jaxpr_dot_flops(closed) -> float:
+    """Dot FLOPs summed over the jaxpr, scan-length aware:
+    ``2 * prod(out_shape) * prod(contracting dims)`` per dot_general."""
+    import numpy as np
+    total = 0.0
+    for eqn, mult in _walk_eqns(closed.jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        (lc, _), _ = eqn.params["dimension_numbers"]
+        lhs = eqn.invars[0].aval.shape
+        out = eqn.outvars[0].aval.shape
+        k = float(np.prod([lhs[d] for d in lc])) if lc else 1.0
+        total += mult * 2.0 * float(np.prod(out)) * k
+    return total
+
+
+def hlo_costs(built: Built) -> tuple[Optional[float], Optional[float]]:
+    """(dot_flops, traffic_bytes) of the compiled HLO, via the same
+    analyzer ``autoplace.costs(source="hlo")`` trusts."""
+    import jax
+
+    from ..launch.hlo_analysis import analyze_module
+    jfn = built.jfn if built.jfn is not None \
+        else jax.jit(built.fn, static_argnums=built.static_argnums)
+    compiled = jfn.lower(*built.args).compile()
+    cost = analyze_module(compiled.as_text())
+    return float(cost.dot_flops), float(cost.traffic_bytes)
+
+
+def check_costs(flops_hlo: Optional[float], bytes_hlo: Optional[float],
+                ref: Optional[CostRef], entry: str
+                ) -> tuple[Optional[dict], list[Violation]]:
+    """Ratio the extracted HLO terms against the roofline reference.
+    Returns ``(cost_row, violations)`` for the benchmark record."""
+    if ref is None or flops_hlo is None:
+        return None, []
+    out = []
+    fr = flops_hlo / ref.flops if ref.flops else float("inf")
+    br = (bytes_hlo / ref.hbm_bytes
+          if bytes_hlo is not None and ref.hbm_bytes else None)
+    row = {"model_flops": ref.flops, "hlo_flops": flops_hlo,
+           "flops_ratio": fr, "flops_bounds": list(ref.flops_bounds),
+           "model_bytes": ref.hbm_bytes, "hlo_bytes": bytes_hlo,
+           "bytes_ratio": br, "bytes_bounds": list(ref.bytes_bounds),
+           "source": ref.source}
+    lo, hi = ref.flops_bounds
+    if not lo <= fr <= hi:
+        out.append(Violation(
+            "cost-model",
+            f"{entry}: HLO dot FLOPs {flops_hlo:.3e} vs roofline "
+            f"{ref.flops:.3e} — ratio {fr:.3f} outside [{lo}, {hi}]; "
+            f"the placement cost model has drifted from the program"))
+    if br is not None:
+        blo, bhi = ref.bytes_bounds
+        if not blo <= br <= bhi:
+            out.append(Violation(
+                "cost-model",
+                f"{entry}: HLO traffic {bytes_hlo:.3e} B vs roofline "
+                f"{ref.hbm_bytes:.3e} B — ratio {br:.3f} outside "
+                f"[{blo}, {bhi}]"))
+    return row, out
+
+
+# ---------------------------------------------------------------------------
+# orchestration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EntryReport:
+    """Everything one (entry, suite) pass produced."""
+
+    entry: str
+    suite: str
+    violations: tuple[Violation, ...] = ()
+    retraces: Optional[int] = None            # None = pass skipped
+    n_eqns: int = 0
+    flops_jaxpr: float = 0.0
+    flops_hlo: Optional[float] = None
+    bytes_hlo: Optional[float] = None
+    cost: Optional[dict] = field(default=None)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def row(self) -> dict[str, Any]:
+        return {"entry": self.entry, "suite": self.suite, "ok": self.ok,
+                "violations": [str(v) for v in self.violations],
+                "retraces": self.retraces, "n_eqns": self.n_eqns,
+                "flops_jaxpr": self.flops_jaxpr,
+                "flops_hlo": self.flops_hlo, "bytes_hlo": self.bytes_hlo,
+                "cost": self.cost}
+
+
+def trace_entry(ep: EntryPoint, suite: str, *, hlo: bool = True
+                ) -> EntryReport:
+    """Build one (entry, suite) instantiation and run all five passes.
+    ``hlo=False`` skips compilation (jaxpr-only passes — fast mode for
+    tests)."""
+    built = ep.build(suite)
+    closed = _trace(built)
+    violations: list[Violation] = []
+    retraces, v = check_retrace(built, ep.name)
+    violations += v
+    violations += check_host_sync(closed, ep.name)
+    violations += check_baked_consts(closed, ep.name,
+                                     limit=ep.const_bytes_limit)
+    violations += check_dtypes(closed, ep.name, allow_f64=ep.allow_f64,
+                               allow_upcast=ep.allow_upcast)
+    fj = jaxpr_dot_flops(closed)
+    fh = bh = None
+    if hlo and (built.cost_ref is not None or not built.abstract):
+        fh, bh = hlo_costs(built)
+    cost, v = check_costs(fh, bh, built.cost_ref, ep.name)
+    violations += v
+    n_eqns = sum(1 for _ in _walk_eqns(closed.jaxpr))
+    return EntryReport(ep.name, suite, tuple(violations), retraces,
+                       n_eqns, fj, fh, bh, cost)
+
+
+def assert_clean(reports: list[EntryReport]) -> list[EntryReport]:
+    """Raise :class:`VerifyError` carrying every violation of a sweep
+    (the programmatic form of the CLI's exit code)."""
+    violations = [v for r in reports for v in r.violations]
+    if violations:
+        raise VerifyError(violations)
+    return reports
+
+
+def run_tracecheck(*, quick: bool = False, entries=None,
+                   hlo: bool = True) -> list[EntryReport]:
+    """Sweep the manifest: every entry point, every suite (``quick``
+    restricts to each entry's first suite). ``entries`` filters by
+    substring match on the entry name."""
+    reports = []
+    for ep in manifest():
+        if entries and not any(pat in ep.name for pat in entries):
+            continue
+        suites = ep.suites[:1] if quick else ep.suites
+        for suite in suites:
+            reports.append(trace_entry(ep, suite, hlo=hlo))
+    return reports
+
+
+def _append_bench(reports: list[EntryReport], quick: bool,
+                  path: Path) -> None:
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "quick": quick,
+        "n_entries": len({r.entry for r in reports}),
+        "n_violations": sum(len(r.violations) for r in reports),
+        "rows": [r.row() for r in reports]})
+    path.write_text(json.dumps(history, indent=1))
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="jaxpr/HLO static analysis of every registered "
+                    "compiled entry point (retrace, host-sync, "
+                    "baked-const, dtype, cost cross-check)")
+    ap.add_argument("--quick", action="store_true",
+                    help="first suite of each entry only (the CI gate)")
+    ap.add_argument("--entries", nargs="*", default=None,
+                    help="substring filter on entry names")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="skip HLO compilation (jaxpr passes only; "
+                         "disables the cost cross-check)")
+    ap.add_argument("--out", default=None,
+                    help="benchmark trajectory path (default: repo-root "
+                         "BENCH_tracecheck.json)")
+    args = ap.parse_args(argv)
+    reports = run_tracecheck(quick=args.quick, entries=args.entries,
+                             hlo=not args.no_hlo)
+    out = Path(args.out) if args.out else \
+        Path(__file__).resolve().parents[3] / "BENCH_tracecheck.json"
+    _append_bench(reports, args.quick, out)
+    bad = []
+    for r in reports:
+        status = "ok" if r.ok else "FAIL"
+        cost = ""
+        if r.cost:
+            cost = f"  flops-ratio {r.cost['flops_ratio']:.3f}"
+        print(f"[{status}] {r.entry} [{r.suite}]  eqns={r.n_eqns} "
+              f"retraces={r.retraces}"
+              f"  dotflops(jaxpr)={r.flops_jaxpr:.3e}{cost}")
+        for v in r.violations:
+            print(f"       {v}")
+            bad.append(v)
+    print(f"{len(reports)} entry/suite pass(es), {len(bad)} violation(s)"
+          f" -> {out.name}", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,6 +33,7 @@ All arrays are frozen (``writeable=False``): consumers share them.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any
 
 import numpy as np
 
@@ -141,7 +142,8 @@ class GraphArrays:
                         self.pred_vol[lo:hi].tolist()))
 
 
-def _csr(adj: list[list[tuple[int, float]]]):
+def _csr(adj: list[list[tuple[int, float]]]
+         ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     ptr = np.zeros(len(adj) + 1, np.int32)
     sid, vol = [], []
     for i, row in enumerate(adj):
@@ -235,7 +237,8 @@ class FaultArrays:
         return max((len(d) for d in self.degrade.values()), default=0)
 
 
-def lower_faults(n_cores: int, script) -> FaultArrays | None:
+def lower_faults(n_cores: int,
+                 script: Any) -> FaultArrays | None:
     """Lower a fault script (anything exposing the ``FaultScript``
     views: ``validate`` / ``fail_times`` / ``slow_events`` /
     ``degrade_events``) against a core count. ``None`` and already
@@ -356,9 +359,10 @@ def _placement_scenario(ga: GraphArrays, ma: MachineArrays,
     )
 
 
-def lower_scenario(graph: AppGraph, machine: MachineModel, schedule,
-                   *, releases: dict[int, float] | None = None,
-                   faults=None) -> ScenarioArrays:
+def lower_scenario(graph: AppGraph, machine: MachineModel,
+                   schedule: Any, *,
+                   releases: dict[int, float] | None = None,
+                   faults: Any = None) -> ScenarioArrays:
     """Lower one scenario. The schedule must place exactly this graph's
     subtasks (the merged-graph view of an online timeline qualifies).
     ``faults`` — a ``repro.faults`` script (or prelowered
@@ -567,8 +571,9 @@ def batch_scenarios(scenarios: list[ScenarioArrays]) -> ScenarioBatch:
         **fault_fields)
 
 
-def lower_population(graph: AppGraph, machine: MachineModel, schedules,
-                     *, releases: dict[int, float] | None = None
+def lower_population(graph: AppGraph, machine: MachineModel,
+                     schedules: list[Any], *,
+                     releases: dict[int, float] | None = None
                      ) -> ScenarioBatch:
     """Lower ``B`` candidate schedules of ONE (graph, machine) pair into
     a single batch — the mapping-search fitness shape (``repro.search``

@@ -31,6 +31,10 @@ def _on_tpu() -> bool:
 
 def flash_attention(q, k, v, *, causal=True, scale=None, window=None,
                     attn_softcap=None, q_block=512, kv_block=512):
+    b, s, _, d = q.shape
+    hkv = k.shape[2]
+    check_shape("flash_attention.k", k, (b, s, hkv, d))
+    check_shape("flash_attention.v", v, (b, s, hkv, v.shape[-1]))
     return _fa.flash_attention(q, k, v, causal=causal, scale=scale,
                                window=window, softcap=attn_softcap,
                                q_block=q_block, kv_block=kv_block,
@@ -38,11 +42,18 @@ def flash_attention(q, k, v, *, causal=True, scale=None, window=None,
 
 
 def rmsnorm(x, w, *, eps=1e-6, zero_centered=True):
+    check_shape("rmsnorm.w", w, (x.shape[-1],))
     return _rn.rmsnorm(x, w, eps=eps, zero_centered=zero_centered,
                        interpret=not _on_tpu())
 
 
 def ssd_scan(x, dt, A, B, C, chunk=256):
+    b, s, h, _ = x.shape
+    g, n = B.shape[2], B.shape[3]
+    check_shape("ssd_scan.dt", dt, (b, s, h))
+    check_shape("ssd_scan.A", A, (h,))
+    check_shape("ssd_scan.B", B, (b, s, g, n))
+    check_shape("ssd_scan.C", C, (b, s, g, n))
     return _ssd.ssd_scan(x, dt, A, B, C, chunk, interpret=not _on_tpu())
 
 
@@ -93,6 +104,17 @@ def sim_relax_pop(pred, lat, volbw, duration, release, *, n_steps,
 
 def flash_decode(q, k_cache, v_cache, pos, *, scale=None, softcap=None,
                  ring=False, kv_block=512):
+    b, _, d = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    check_shape("flash_decode.k_cache", k_cache, (b, t, hkv, d))
+    check_shape("flash_decode.v_cache", v_cache,
+                (b, t, hkv, v_cache.shape[-1]))
+    check_shape("flash_decode.pos", pos, (b,))
+    if not ring:
+        # pos counts valid cache entries, so [0, t]; past t the kernel
+        # would mask against the wrong prefix and return plausible
+        # garbage (ring buffers carry absolute positions — unbounded)
+        check_gather_bounds(pos, t, "flash_decode.pos")
     return _fd.flash_decode(q, k_cache, v_cache, pos, scale=scale,
                             softcap=softcap, ring=ring, kv_block=kv_block,
                             interpret=not _on_tpu())

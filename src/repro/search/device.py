@@ -45,7 +45,7 @@ host decoder and returns the better of it and the heuristic baseline.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import numpy as np
 
@@ -120,7 +120,9 @@ def device_inputs(graph: AppGraph, machine: MachineModel, *,
 # decode: genes -> cores / durations / per-edge lags, all gathers
 # ---------------------------------------------------------------------------
 
-def _decode_common(inp: DevicePopulation, genes):
+def _decode_common(inp: DevicePopulation, genes: jnp.ndarray
+                   ) -> tuple[jnp.ndarray, jnp.ndarray,
+                              jnp.ndarray, jnp.ndarray]:
     """(core, duration, lag_lat, lag_volbw) of a population — (B, S) and
     (B, S, P), f32. Volume-free edges arrive instantly (the simulator's
     edge rule); pads carry ``-inf`` so they never win the readiness max."""
@@ -140,8 +142,9 @@ def _decode_common(inp: DevicePopulation, genes):
     return core, dur, lag_lat, lag_volbw
 
 
-def _candidate_ends_scan(inp: DevicePopulation, core, dur, lag_lat,
-                         lag_volbw):
+def _candidate_ends_scan(inp: DevicePopulation, core: jnp.ndarray,
+                         dur: jnp.ndarray, lag_lat: jnp.ndarray,
+                         lag_volbw: jnp.ndarray) -> jnp.ndarray:
     """(S,) finish times of one candidate: the append-only list decode
     as a ``lax.scan`` over topo slots. The carry is the (S+1,) end
     vector (slot S = sentinel 0) plus the (C,) per-core frontier — the
@@ -165,7 +168,7 @@ def _candidate_ends_scan(inp: DevicePopulation, core, dur, lag_lat,
     return ends[:s]
 
 
-def _prev_on_core(core, sentinel: int):
+def _prev_on_core(core: jnp.ndarray, sentinel: int) -> jnp.ndarray:
     """(B, S) topo position of the previous same-core subtask (the
     in-order edge), ``sentinel`` where none — per candidate, via one
     stable argsort grouping topo positions by core."""
@@ -180,7 +183,10 @@ def _prev_on_core(core, sentinel: int):
     return jnp.zeros_like(core).at[rows, order].set(prev_sorted)
 
 
-def population_gather_inputs(inp: DevicePopulation, genes):
+def population_gather_inputs(
+        inp: DevicePopulation, genes: jnp.ndarray
+        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                   jnp.ndarray, jnp.ndarray]:
     """(pred, lat, volbw, duration, release) in the population-kernel
     gather shape — the device decode resolved to ``sim_relax_pop``
     inputs, the in-order core edge appended as a zero-lag column."""
@@ -221,7 +227,8 @@ def population_ends_kernel(inp: DevicePopulation, genes) -> jnp.ndarray:
 _prepare_kernel_inputs = jax.jit(population_gather_inputs)
 
 
-def population_fitness_device(inp: DevicePopulation, genes, *,
+def population_fitness_device(inp: DevicePopulation,
+                              genes: jnp.ndarray, *,
                               method: str = "scan") -> jnp.ndarray:
     """(B,) makespans of a population — max finish time per candidate."""
     if inp.n_subtasks == 0:
@@ -235,9 +242,11 @@ def population_fitness_device(inp: DevicePopulation, genes, *,
 # one jitted generation: select -> crossover -> mutate -> evaluate
 # ---------------------------------------------------------------------------
 
-def _generation(inp: DevicePopulation, key, pop, fit, *, n_cores: int,
-                elite: int, tournament: int, elite_bias: float,
-                p_mut: float, method: str):
+def _generation(inp: DevicePopulation, key: jnp.ndarray,
+                pop: jnp.ndarray, fit: jnp.ndarray, *,
+                n_cores: int, elite: int, tournament: int,
+                elite_bias: float, p_mut: float, method: str
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(new_pop, new_fit): the full bias-elitist generation as array
     ops. Selection is tournament-of-``k`` by fitness gather; a
     ``elite_bias`` fraction of first parents comes from the sorted
@@ -264,8 +273,8 @@ def _generation(inp: DevicePopulation, key, pop, fit, *, n_cores: int,
     return child, population_fitness_device(inp, child, method=method)
 
 
-def generation_step(params, *, n_tasks: int, n_cores: int,
-                    method: str = "scan"):
+def generation_step(params: Any, *, n_tasks: int, n_cores: int,
+                    method: str = "scan") -> Callable:
     """The jitted ``(inp, key, pop, fit) -> (pop, fit)`` generation step
     :func:`ga_search_device` iterates — exposed so the benchmark can
     time one device generation in isolation (warm the jit cache with

@@ -1,0 +1,17 @@
+"""Planted-defect fixtures for the tracecheck analyzer.
+
+One module per tracecheck pass, each deliberately committing the exact
+sin its pass exists to catch — a forced retrace, a hidden ``float()``
+host sync, a 1 MB baked constant, an f64/widening upcast, a cost model
+off by 2x. ``tests/test_tracecheck.py`` runs the analyzer over each
+fixture's :class:`~repro.analysis.entrypoints.EntryPoint` and asserts
+the finding carries the pass's named violation kind — the same
+name-the-corruption contract the schedule verifier's mutation tests
+pin.
+"""
+
+from . import baked, cost, dtype, hostsync, retrace
+
+ALL = {"retrace": retrace.ENTRY, "host-sync": hostsync.ENTRY,
+       "baked-const": baked.ENTRY, "dtype": dtype.ENTRY,
+       "cost-model": cost.ENTRY}

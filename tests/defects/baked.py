@@ -1,0 +1,24 @@
+"""Defect: a 1 MB array closed over instead of passed as an argument.
+
+The classic "closed over the population" bug — results stay correct,
+but the operand is baked into the jaxpr as a constant: re-tracing
+re-ships it, and no other population can reuse the trace."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.entrypoints import Built, EntryPoint
+
+_POPULATION = np.ones((512, 512), np.float32)       # 1 MiB
+
+
+def _score_against_baked(x):
+    return (jnp.asarray(_POPULATION) * x).sum(axis=1)
+
+
+def _build(suite: str) -> Built:
+    x = jnp.ones(512, jnp.float32)
+    return Built(fn=_score_against_baked, args=(x,))
+
+
+ENTRY = EntryPoint("defect.baked", _build, suites=("8core",))

@@ -1,0 +1,31 @@
+"""Defect: a roofline reference off by 2x from the program it models.
+
+The matmul really costs ``2*M*N*K`` dot FLOPs; the planted CostRef
+claims twice that, so the extracted-HLO/model ratio lands at 0.5 —
+outside the stated bounds, the cost-model-drift signal AMTHA's
+placement quality hinges on."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.entrypoints import Built, CostRef, EntryPoint
+
+_M, _N, _K = 64, 96, 128
+
+
+def _matmul(a, b):
+    return a @ b
+
+
+def _build(suite: str) -> Built:
+    a = jnp.asarray(np.ones((_M, _K)), jnp.float32)
+    b = jnp.asarray(np.ones((_K, _N)), jnp.float32)
+    true_flops = 2.0 * _M * _N * _K
+    ref = CostRef(flops=2.0 * true_flops,          # the planted 2x drift
+                  hbm_bytes=4.0 * (_M * _K + _K * _N + _M * _N),
+                  flops_bounds=(0.85, 1.15), bytes_bounds=(0.05, 20.0),
+                  source="planted 2x-inflated reference")
+    return Built(fn=_matmul, args=(a, b), cost_ref=ref)
+
+
+ENTRY = EntryPoint("defect.cost", _build, suites=("8core",))

@@ -1,0 +1,29 @@
+"""Defect: a ``float()`` reduction smuggled through ``pure_callback``.
+
+The AST lint cannot see it (the ``float()`` lives in a lambda handed
+to jax, not applied to a traced parameter), but the jaxpr carries the
+``pure_callback`` primitive — a host round trip per call."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.entrypoints import Built, EntryPoint
+
+
+def _host_total(v):
+    return np.float32(float(np.asarray(v).sum()))   # lint: sync-ok
+
+
+def _leaky_norm(x):
+    total = jax.pure_callback(
+        _host_total, jax.ShapeDtypeStruct((), np.float32), x)
+    return x / (total + 1.0)
+
+
+def _build(suite: str) -> Built:
+    x = jnp.ones(32, jnp.float32)
+    return Built(fn=_leaky_norm, args=(x,), sweep=((x * 2.0,),))
+
+
+ENTRY = EntryPoint("defect.hostsync", _build, suites=("8core",))

@@ -1,0 +1,23 @@
+"""Defect: jit keyed on an argument *value* via ``static_argnums``.
+
+Every sweep call carries a different scale factor, so the trace cache
+grows per call — the recompile-per-generation bug the device GA was
+built to avoid."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.entrypoints import Built, EntryPoint
+
+
+def _scaled_sum(x, scale):          # scale is static: retraces per value
+    return (x * scale).sum()
+
+
+def _build(suite: str) -> Built:
+    x = jnp.asarray(np.linspace(0.0, 1.0, 64), jnp.float32)
+    return Built(fn=_scaled_sum, args=(x, 2), static_argnums=(1,),
+                 sweep=((x, 3), (x + 1.0, 4)))
+
+
+ENTRY = EntryPoint("defect.retrace", _build, suites=("8core",))
